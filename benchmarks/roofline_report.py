@@ -1,0 +1,50 @@
+"""Render the roofline table from benchmarks/results/roofline/*.json."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "roofline"
+
+
+def load_all():
+    recs = []
+    if RESULTS.exists():
+        for p in sorted(RESULTS.glob("*.json")):
+            recs.append(json.loads(p.read_text()))
+    return [r for r in recs if r.get("ok")]
+
+
+def render(recs=None) -> str:
+    recs = recs if recs is not None else load_all()
+    lines = [
+        "| arch | shape | mesh | comp_s | mem_s | coll_s | bottleneck "
+        "| model/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']}"
+            f"{'/w' + str(r['quant_bits']) if r.get('quant_bits', 16) != 16 else ''} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['bottleneck']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def run(quick: bool = False):
+    print("# --- Roofline table (per arch x shape, 16x16 mesh) ---")
+    recs = load_all()
+    if not recs:
+        print("(no roofline results yet — run "
+              "`python -m repro.launch.dryrun --roofline`)")
+        return
+    print(render(recs))
+    from benchmarks.bench_lib import emit
+
+    for r in recs:
+        emit(f"roofline/{r['arch']}_{r['shape']}",
+             r["step_s_lower_bound"] * 1e6,
+             f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.3f}")

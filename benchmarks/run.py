@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus human-readable tables)
+for:
+  table1_neuron      — paper Table I (neuron FPGA resources, model vs paper)
+  table2_system      — paper Table II (system resources/latency/power)
+  fig45_quantization — paper Figs. 4 & 5 (accuracy/memory vs precision,
+                       trained on the synthetic vision task)
+  latency_energy     — paper §III-D CPU/GPU comparison (analytical)
+  kernel_bench       — Pallas-kernel hot spots + packed-bandwidth roofline
+  roofline_report    — per (arch x shape) roofline terms from the dry-run
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig45_quantization,
+        kernel_bench,
+        latency_energy,
+        roofline_report,
+        table1_neuron,
+        table2_system,
+    )
+
+    suites = {
+        "table1": table1_neuron.run,
+        "table2": table2_system.run,
+        "fig45": fig45_quantization.run,
+        "latency": latency_energy.run,
+        "kernels": kernel_bench.run,
+        "roofline": roofline_report.run,
+    }
+    picked = {args.only: suites[args.only]} if args.only else suites
+    t0 = time.time()
+    for name, fn in picked.items():
+        print(f"\n=== {name} ===", flush=True)
+        fn(quick=args.quick)
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Table I — neuron-level FPGA resources.
+
+Prints the analytical NCE model's LUT/FF/delay/power per precision next to
+the paper's published rows.  The INT8 row is the calibration anchor
+(matches by construction); INT4/INT2 are model PREDICTIONS showing the
+multi-precision datapath trend, and the competitor rows are quoted from
+the paper for context.
+"""
+
+from __future__ import annotations
+
+from repro.perfmodel.fpga_model import (
+    PAPER_TABLE1,
+    neuron_resources,
+)
+from benchmarks.bench_lib import emit
+
+
+def run(quick: bool = False):
+    print("# --- Table I: neuron resources (model vs paper) ---")
+    print(f"{'design':28s} {'LUTs':>7s} {'FFs':>6s} {'delay_ns':>9s} "
+          f"{'power_mW':>9s}")
+    for name, (l, f, d, p) in PAPER_TABLE1.items():
+        print(f"{name:28s} {l:7d} {f:6d} {d:9.2f} {p:9.1f}")
+    for bits in (8, 4, 2):
+        r = neuron_resources(bits)
+        print(f"{'model INT' + str(bits):28s} {r['luts']:7d} {r['ffs']:6d} "
+              f"{r['delay_ns']:9.2f} {r['power_mw']:9.1f}   "
+              f"({r['lanes']}x lanes)")
+        emit(f"table1/neuron_int{bits}_luts", r["luts"],
+             f"ffs={r['ffs']};delay_ns={r['delay_ns']};power_mw={r['power_mw']}")
+    r8 = neuron_resources(8)
+    ok = (abs(r8["luts"] - 459) < 1 and abs(r8["delay_ns"] - 0.39) < 0.01)
+    print(f"calibration anchor reproduces paper INT8 row: {ok}")

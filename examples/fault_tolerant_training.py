@@ -1,0 +1,43 @@
+"""Fault-tolerance demo: a training run that survives two injected node
+failures and resumes bit-exactly from its async checkpoints.
+
+Run:  PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+
+import shutil
+
+from repro.configs import get_config
+from repro.distributed.fault_tolerance import FailureInjector, run_with_restarts
+from repro.train import optimizer as opt
+from repro.train.trainer import TrainConfig, Trainer
+
+CKPT = "/tmp/repro_ft_example"
+shutil.rmtree(CKPT, ignore_errors=True)
+
+cfg = get_config("olmo-1b", smoke=True)
+tcfg = TrainConfig(steps=40, batch=4, seq=64, ckpt_dir=CKPT, ckpt_every=8,
+                   log_every=8,
+                   opt=opt.OptConfig(warmup_steps=4, total_steps=40))
+injector = FailureInjector(fail_at_steps=(13, 29))
+
+
+def attempt(n):
+    print(f"--- attempt {n} ---")
+    return Trainer(cfg, tcfg, injector=injector).run()
+
+
+def on_restart(attempt_no, exc):
+    print(f"!! {exc} -> restarting (attempt {attempt_no})")
+
+
+out = run_with_restarts(attempt, max_restarts=4, on_restart=on_restart)
+print(f"\nsurvived {len(injector.fired)} failures; "
+      f"final loss {out['final_loss']:.4f} over {len(out['losses'])} "
+      f"steps of the last attempt")
+
+# show the trajectory equals an uninterrupted run
+shutil.rmtree(CKPT, ignore_errors=True)
+ref = Trainer(cfg, tcfg, log=lambda *_: None).run()
+print(f"uninterrupted reference final loss {ref['final_loss']:.4f} "
+      f"(delta {abs(ref['final_loss']-out['final_loss']):.2e} — "
+      f"restart is trajectory-exact)")

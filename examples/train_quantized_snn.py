@@ -1,0 +1,74 @@
+"""Train the paper's VGG-16 SNN (reduced) at a chosen precision with
+surrogate-gradient BPTT + threshold balancing, then deploy it through the
+exact packed integer pipeline.
+
+Run:  PYTHONPATH=src python examples/train_quantized_snn.py [--bits 4]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import LIFConfig
+from repro.data import synthetic
+from repro.models import snn_cnn
+from repro.quant import PrecisionConfig, quantize
+from repro.train import optimizer as opt
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--bits", type=int, default=4, choices=(2, 4, 8, 16))
+ap.add_argument("--steps", type=int, default=120)
+args = ap.parse_args()
+
+pc = PrecisionConfig(bits=args.bits, group_size=-1) if args.bits != 16 \
+    else PrecisionConfig(bits=16)
+cfg = snn_cnn.SNNConfig(model="vgg16", img_size=16, timesteps=3, scale=0.25,
+                        n_classes=10, precision=pc,
+                        lif=LIFConfig(leak_shift=3, threshold=0.5))
+(x_tr, y_tr), (x_te, y_te) = synthetic.make_vision_dataset(
+    n_classes=10, img_size=16, n_train=1024, n_test=256)
+
+params = snn_cnn.init(jax.random.PRNGKey(0), cfg)
+params = snn_cnn.calibrate(params, cfg, jnp.asarray(x_tr[:32]))
+state = opt.init(params)
+ocfg = opt.OptConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps,
+                     weight_decay=0.0, clip_norm=5.0)
+
+
+def ce(params, x, y):
+    logits = snn_cnn.apply(params, cfg, x)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    return jnp.mean(lse - jnp.take_along_axis(logits, y[:, None], 1)[:, 0])
+
+
+@jax.jit
+def step(params, state, x, y):
+    loss, g = jax.value_and_grad(lambda p: ce(p, x, y))(params)
+    params, state, _ = opt.update(g, state, params, ocfg)
+    return params, state, loss
+
+
+t0 = time.time()
+for i in range(args.steps):
+    j = (i * 64) % (len(x_tr) - 64)
+    params, state, loss = step(params, state, jnp.asarray(x_tr[j:j + 64]),
+                               jnp.asarray(y_tr[j:j + 64]))
+    if i % 20 == 0:
+        print(f"step {i:4d} loss {float(loss):.3f} "
+              f"({time.time()-t0:.0f}s)")
+
+logits = snn_cnn.apply(params, cfg, jnp.asarray(x_te))
+acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y_te)))
+print(f"\nW{args.bits} test accuracy: {acc*100:.1f}%")
+
+# deployment: pack the first conv's weights into the integer engine format
+w0 = params["convs"][0]["w"]
+k1, k2, ci, co = w0.shape
+qt = quantize(w0.transpose(3, 0, 1, 2).reshape(co, -1),
+              PrecisionConfig(bits=args.bits if args.bits != 16 else 8))
+print(f"deployed conv0: {qt.data.shape} int32 words "
+      f"({qt.compression_ratio():.1f}x vs fp32) — ready for the NCE "
+      f"spike_matmul kernel")

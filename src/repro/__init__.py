@@ -1,0 +1,3 @@
+"""repro — L-SPINE: low-precision SIMD spiking/quantized compute in JAX."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,5 @@
+# NOTE: nce and snn_layers import repro.quant (which imports core.packing),
+# so they are intentionally NOT imported here — import them directly.
+from repro.core import encoding, lif, packing
+
+__all__ = ["encoding", "lif", "packing"]

@@ -1,0 +1,59 @@
+"""Spike encoders — the front of the L-SPINE pipeline (Fig. 1 'Encoder').
+
+Input activations are mapped to binary spike trains over T timesteps and
+stored bit-packed (the spike buffer).  Three encoders, matching common SNN
+deployment practice:
+
+* rate (Poisson/Bernoulli): P(spike at t) = clamp(x, 0, 1)
+* direct: the analog value is injected as constant current every step
+  (DIET-SNN-style direct encoding — the paper's low-latency regime)
+* latency (time-to-first-spike): one spike at t = round((1-x)(T-1))
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+
+def rate_encode(key, x: jnp.ndarray, timesteps: int) -> jnp.ndarray:
+    """Bernoulli rate coding.  x in [0,1].  Returns (T, *x.shape) {0,1} int8."""
+    p = jnp.clip(x, 0.0, 1.0)
+    u = jax.random.uniform(key, (timesteps, *x.shape), dtype=jnp.float32)
+    return (u < p).astype(jnp.int8)
+
+
+def direct_encode(x: jnp.ndarray, timesteps: int) -> jnp.ndarray:
+    """Constant-current injection: replicate x across T (float currents)."""
+    return jnp.broadcast_to(x, (timesteps, *x.shape))
+
+
+def latency_encode(x: jnp.ndarray, timesteps: int) -> jnp.ndarray:
+    """Time-to-first-spike: brighter = earlier.  Returns (T, ...) {0,1} int8."""
+    x = jnp.clip(x, 0.0, 1.0)
+    t_fire = jnp.round((1.0 - x) * (timesteps - 1)).astype(jnp.int32)
+    t_idx = jnp.arange(timesteps, dtype=jnp.int32).reshape(
+        (timesteps,) + (1,) * x.ndim
+    )
+    return (t_idx == t_fire[None]).astype(jnp.int8)
+
+
+def pack_spike_train(spikes: jnp.ndarray) -> jnp.ndarray:
+    """Bit-pack a (T, ..., n) {0,1} spike train along its last axis.
+
+    This is the on-HBM spike-buffer format: 32 spikes per int32 word,
+    cutting spike traffic 8x vs int8 storage (the FPGA's spike buffer
+    stores 1 bit per event for the same reason).
+    """
+    return packing.pack_bool(spikes)
+
+
+def unpack_spike_train(words: jnp.ndarray, n: int) -> jnp.ndarray:
+    return packing.unpack_bool(words, n).astype(jnp.int8)
+
+
+def spike_rate(spikes: jnp.ndarray) -> jnp.ndarray:
+    """Mean firing rate over the time axis (axis 0) — readout helper."""
+    return jnp.mean(spikes.astype(jnp.float32), axis=0)

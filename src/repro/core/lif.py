@@ -1,0 +1,143 @@
+"""Shift-add LIF neuron dynamics — L-SPINE's multiplier-less neuron model.
+
+The paper's NCE implements, per timestep, entirely with shifts and adds:
+
+    v[t]   = v[t-1] - (v[t-1] >> k)  + sum_j s_j[t] * w_j      (integer)
+    s[t]   = v[t] >= theta
+    v[t]   = v_reset            if s[t] and hard reset
+           = v[t] - theta       if s[t] and soft  reset
+
+* the leak ``v - (v >> k)`` realizes a decay factor ``beta = 1 - 2^-k``
+  without a multiplier;
+* synaptic input is an integer accumulate of quantized weights gated by
+  binary spikes (the AC unit);
+* threshold/reset are a comparator and a mux.
+
+Two forms live here:
+  - :func:`lif_step_int`   — exact integer semantics (deployment / kernels
+    oracle).  Bit-exact with kernels/lif_step.
+  - :func:`lif_step_float` — float twin with a surrogate-gradient spike
+    so BPTT training works; forward is the same dynamics with
+    ``beta = 1 - 2^-k``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFConfig:
+    leak_shift: int = 3          # k: beta = 1 - 2^-k  (k=3 -> beta=0.875)
+    threshold: float = 1.0       # firing threshold (integer domain: theta_q)
+    v_reset: float = 0.0
+    soft_reset: bool = True      # subtract-threshold reset (common for deep SNN)
+    surrogate_beta: float = 4.0  # sharpness of the surrogate gradient
+    timesteps: int = 4           # T: BPTT window / inference window
+
+    @property
+    def beta(self) -> float:
+        return 1.0 - 2.0 ** (-self.leak_shift)
+
+
+# ---------------------------------------------------------------------------
+# Integer (deployment) semantics
+# ---------------------------------------------------------------------------
+
+def lif_step_int(
+    v: jnp.ndarray,           # int32 membrane potential
+    i_syn: jnp.ndarray,       # int32 synaptic current (already accumulated)
+    *,
+    leak_shift: int,
+    threshold_q: int,
+    v_reset_q: int = 0,
+    soft_reset: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One multiplier-less integer LIF update.  Returns (v', spikes)."""
+    v = v.astype(jnp.int32)
+    # Arithmetic right shift: for v >= 0 this is floor(v / 2^k); JAX's >>
+    # on signed ints is arithmetic, matching the RTL barrel shifter.
+    v = v - (v >> leak_shift) + i_syn.astype(jnp.int32)
+    spikes = (v >= threshold_q).astype(jnp.int32)
+    if soft_reset:
+        v = v - spikes * threshold_q
+    else:
+        v = jnp.where(spikes == 1, jnp.int32(v_reset_q), v)
+    return v, spikes
+
+
+def lif_rollout_int(
+    v0: jnp.ndarray,
+    i_syn_t: jnp.ndarray,     # (T, ...) int32 currents per timestep
+    *,
+    leak_shift: int,
+    threshold_q: int,
+    v_reset_q: int = 0,
+    soft_reset: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scan T integer LIF steps.  Returns (v_T, spikes_t: (T, ...))."""
+
+    def step(v, i_syn):
+        v, s = lif_step_int(
+            v,
+            i_syn,
+            leak_shift=leak_shift,
+            threshold_q=threshold_q,
+            v_reset_q=v_reset_q,
+            soft_reset=soft_reset,
+        )
+        return v, s
+
+    return jax.lax.scan(step, v0.astype(jnp.int32), i_syn_t)
+
+
+# ---------------------------------------------------------------------------
+# Float twin with surrogate gradient (training)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def spike_fn(v_minus_thresh: jnp.ndarray, beta: float):
+    return (v_minus_thresh >= 0).astype(v_minus_thresh.dtype)
+
+
+def _spike_fwd(x, beta):
+    return spike_fn(x, beta), (x, beta)
+
+
+def _spike_bwd(res, g):
+    x, beta = res
+    # fast-sigmoid surrogate: d/dx [x / (1 + beta|x|)] = 1 / (1 + beta|x|)^2
+    surr = 1.0 / (1.0 + beta * jnp.abs(x)) ** 2
+    return (g * surr, None)
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+
+def lif_step_float(
+    v: jnp.ndarray,
+    i_syn: jnp.ndarray,
+    cfg: LIFConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Float LIF step, forward-identical to the shift-add dynamics."""
+    v = v * cfg.beta + i_syn
+    s = spike_fn(v - cfg.threshold, cfg.surrogate_beta)
+    if cfg.soft_reset:
+        v = v - s * cfg.threshold
+    else:
+        v = jnp.where(s > 0, cfg.v_reset, v)
+    return v, s
+
+
+def lif_rollout_float(
+    v0: jnp.ndarray, i_syn_t: jnp.ndarray, cfg: LIFConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def step(v, i):
+        v, s = lif_step_float(v, i, cfg)
+        return v, s
+
+    return jax.lax.scan(step, v0, i_syn_t)

@@ -1,0 +1,131 @@
+"""Neuron Compute Engine — the deployment-path integer pipeline.
+
+This is the software twin of L-SPINE's NCE (Fig. 2): per timestep,
+
+    packed spikes --unpack--> binary operands
+    packed weights --unpack--> INTb operands     (b = 2/4/8, PC signal)
+    AC unit:   i_syn = spikes @ W_q              (multiplier-less: binary x int)
+    LIF:       v -= v>>k; v += i_syn; s = v>=theta; reset
+
+All arithmetic is int32, matching the RTL.  The hot ops route through the
+Pallas kernels (spike_matmul, lif_step) when the backend is 'pallas' /
+'interpret'; the 'jnp' backend uses the bit-identical reference path —
+selected in repro.kernels.backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.lif import lif_step_int
+from repro.quant.formats import PrecisionConfig, QuantizedTensor
+from repro.quant.ptq import quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class NCEConfig:
+    precision: PrecisionConfig = PrecisionConfig(bits=8)
+    leak_shift: int = 3
+    threshold_q: int = 64         # integer-domain threshold
+    soft_reset: bool = True
+
+    @property
+    def simd_lanes(self) -> int:
+        return self.precision.simd_lanes
+
+
+class NeuronComputeEngine:
+    """Stateless compute engine; state (v, packed spikes) is carried by caller.
+
+    Weights are held packed (QuantizedTensor).  ``step`` consumes one
+    timestep of bit-packed input spikes and returns updated membrane and
+    bit-packed output spikes — the exact dataflow of one NCE column pass.
+    """
+
+    def __init__(self, cfg: NCEConfig, weights: QuantizedTensor):
+        if weights.bits != cfg.precision.bits:
+            raise ValueError("weight bits != engine precision")
+        self.cfg = cfg
+        self.weights = weights  # logical (out, in), packed along in
+
+    @classmethod
+    def from_float(cls, cfg: NCEConfig, w: jnp.ndarray) -> "NeuronComputeEngine":
+        """w: (in, out) float weights -> packed (out, in) int."""
+        return cls(cfg, quantize(w.T, cfg.precision))
+
+    @property
+    def d_in(self) -> int:
+        return self.weights.shape[1]
+
+    @property
+    def d_out(self) -> int:
+        return self.weights.shape[0]
+
+    def accumulate(self, spikes_packed: jnp.ndarray) -> jnp.ndarray:
+        """AC unit: packed spikes (B, ceil(d_in/32)) -> int32 currents (B, d_out).
+
+        Dequant-free: accumulates integer weight codes; the scale is folded
+        into the integer threshold (theta_q = theta / scale), exactly as the
+        paper folds scaling out of the datapath ("inefficient scaling
+        operations" it eliminates).
+        """
+        from repro.kernels import spike_matmul_ops
+
+        return spike_matmul_ops.spike_matmul(
+            spikes_packed, self.weights, d_in=self.d_in
+        )
+
+    def step(
+        self, v: jnp.ndarray, spikes_packed: jnp.ndarray
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """One NCE timestep.  Returns (v', out_spikes_packed (B, ceil(d_out/32)))."""
+        from repro.kernels import lif_step_ops
+
+        i_syn = self.accumulate(spikes_packed)
+        v, s = lif_step_ops.lif_step(
+            v,
+            i_syn,
+            leak_shift=self.cfg.leak_shift,
+            threshold_q=self.cfg.threshold_q,
+            soft_reset=self.cfg.soft_reset,
+        )
+        return v, packing.pack_bool(s)
+
+    def rollout(
+        self, spikes_packed_t: jnp.ndarray
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Scan T timesteps of packed input spikes (T, B, words_in)."""
+        b = spikes_packed_t.shape[1]
+        v0 = jnp.zeros((b, self.d_out), jnp.int32)
+
+        def body(v, sp):
+            v, out = self.step(v, sp)
+            return v, out
+
+        return jax.lax.scan(body, v0, spikes_packed_t)
+
+
+def throughput_model(cfg: NCEConfig, n_macs: int) -> dict:
+    """Cycle/energy model of one NCE — feeds benchmarks/table1.
+
+    The FPGA executes `simd_lanes` low-bit MACs per cycle per NCE; energy
+    per MAC scales ~ bits (switching activity).  Constants calibrated to
+    the paper's INT8 row (Table I: 0.39 ns, 4.2 mW).
+    """
+    lanes = cfg.simd_lanes  # 16/8/4 for 2/4/8-bit
+    cycles = (n_macs + lanes - 1) // lanes
+    t_cycle_ns = 0.39
+    p_mw = 4.2 * (cfg.precision.bits / 8.0) ** 0.5  # activity-scaled
+    return {
+        "bits": cfg.precision.bits,
+        "simd_lanes": lanes,
+        "cycles": cycles,
+        "latency_ns": cycles * t_cycle_ns,
+        "power_mw": p_mw,
+        "energy_nj": cycles * t_cycle_ns * p_mw * 1e-3,
+    }

@@ -1,0 +1,125 @@
+"""Spiking layers (functional init/apply, dict-pytree params).
+
+Each layer computes synaptic currents with a (optionally fake-quantized)
+linear/conv op and applies LIF dynamics over T timesteps.  Training uses
+the float/surrogate twin; deployment uses the integer path through the
+NCE (core/nce.py) with packed weights.
+
+Layout convention: time axis first — activations are (T, B, ...).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import LIFConfig, lif_rollout_float
+from repro.quant.formats import PrecisionConfig
+from repro.quant.qat import fake_quant
+
+
+def _maybe_fq(w: jnp.ndarray, pc: Optional[PrecisionConfig]) -> jnp.ndarray:
+    if pc is not None and pc.quantized:
+        # weights are (in, out) / conv OIHW-flattened; fake-quant groups run
+        # along the last axis, so transpose to put the contraction last.
+        return jnp.swapaxes(
+            fake_quant(jnp.swapaxes(w, -1, -2), pc), -1, -2
+        )
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Dense spiking layer
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = (2.0 / d_in) ** 0.5
+    return {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale,
+            "g": jnp.ones((d_out,), dtype)}
+
+
+def spiking_dense_apply(
+    params,
+    spikes_t: jnp.ndarray,      # (T, B, d_in) — {0,1} spikes or float currents
+    lif: LIFConfig,
+    pc: Optional[PrecisionConfig] = None,
+):
+    """Synaptic accumulation + LIF rollout.  Returns (T, B, d_out) spikes."""
+    w = _maybe_fq(params["w"], pc)
+    i_syn_t = jnp.einsum("tbi,io->tbo", spikes_t.astype(w.dtype), w)
+    if "g" in params:  # threshold-balancing gain (calibrated + learnable)
+        i_syn_t = i_syn_t * params["g"]
+    v0 = jnp.zeros(i_syn_t.shape[1:], i_syn_t.dtype)
+    _, s_t = lif_rollout_float(v0, i_syn_t, lif)
+    return s_t
+
+
+# ---------------------------------------------------------------------------
+# Conv2D spiking layer (NHWC)
+# ---------------------------------------------------------------------------
+
+def conv_init(key, c_in: int, c_out: int, k: int = 3, dtype=jnp.float32):
+    scale = (2.0 / (c_in * k * k)) ** 0.5
+    return {"w": jax.random.normal(key, (k, k, c_in, c_out), dtype) * scale,
+            "g": jnp.ones((c_out,), dtype)}
+
+
+def _conv2d(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def spiking_conv_apply(
+    params,
+    spikes_t: jnp.ndarray,      # (T, B, H, W, C)
+    lif: LIFConfig,
+    pc: Optional[PrecisionConfig] = None,
+    stride: int = 1,
+):
+    w = params["w"]
+    if pc is not None and pc.quantized:
+        # per-output-channel groups: reshape (k,k,ci,co)->(co, k*k*ci)
+        k1, k2, ci, co = w.shape
+        wt = w.transpose(3, 0, 1, 2).reshape(co, k1 * k2 * ci)
+        wt = fake_quant(wt, pc)
+        w = wt.reshape(co, k1, k2, ci).transpose(1, 2, 3, 0)
+    conv = lambda x: _conv2d(x.astype(w.dtype), w, stride=stride)
+    i_syn_t = jax.vmap(conv)(spikes_t)
+    if "g" in params:  # threshold-balancing gain (calibrated + learnable)
+        i_syn_t = i_syn_t * params["g"]
+    v0 = jnp.zeros(i_syn_t.shape[1:], i_syn_t.dtype)
+    _, s_t = lif_rollout_float(v0, i_syn_t, lif)
+    return s_t
+
+
+def avgpool_t(spikes_t: jnp.ndarray, window: int = 2) -> jnp.ndarray:
+    """Average pooling applied per timestep (keeps spike statistics)."""
+
+    def pool(x):
+        return jax.lax.reduce_window(
+            x,
+            0.0,
+            jax.lax.add,
+            (1, window, window, 1),
+            (1, window, window, 1),
+            "VALID",
+        ) / (window * window)
+
+    return jax.vmap(pool)(spikes_t.astype(jnp.float32))
+
+
+def readout_apply(params, spikes_t: jnp.ndarray) -> jnp.ndarray:
+    """Non-spiking readout: accumulate currents over T, no threshold.
+
+    Returns (B, n_classes) logits = mean_t (spikes_t @ W).
+    """
+    w = params["w"]
+    i_syn_t = jnp.einsum("tbi,io->tbo", spikes_t.astype(w.dtype), w)
+    return jnp.mean(i_syn_t, axis=0)

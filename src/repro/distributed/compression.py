@@ -1,0 +1,86 @@
+"""Gradient compression: int8 error-feedback all-reduce over the DP axis.
+
+A ring fp32 all-reduce moves ~2x4 bytes/element over the slowest link.
+``ef_int8_allreduce_mean`` moves int8 instead: reduce-scatter the int8
+codes (all_to_all + local fp32 sum), then all-gather the int8 result —
+~2x1 bytes/element, a 4x reduction on the DP-axis collective term.  The
+quantization error is carried in an error-feedback buffer and re-injected
+next step, so the compressed SGD trajectory tracks the exact one (EF-SGD,
+Karimireddy et al. 2019).
+
+Used inside shard_map over the ``data``(+``pod``) axis by the
+``--grad-compression`` train-step variant.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ef_int8_allreduce_mean(
+    g: jnp.ndarray, err: jnp.ndarray, axis_name: str
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean of g across axis_name with int8 wire format + error feedback.
+
+    g:   local gradient shard (any shape, flattened internally)
+    err: error-feedback buffer (same shape, fp32)
+    Returns (mean_gradient fp32, new_err).
+    Requires numel % axis_size == 0 (caller pads).
+    """
+    n = jax.lax.axis_size(axis_name)
+    shape = g.shape
+    x = g.astype(jnp.float32) + err.astype(jnp.float32)
+
+    flat = x.reshape(n, -1)                       # (n, chunk)
+    q, scale = _quant_int8(flat)
+    # decode what was actually sent; the rest is the new error
+    sent = q.astype(jnp.float32) * scale
+    new_err = (x - sent.reshape(shape)).astype(err.dtype)
+
+    # reduce-scatter: every peer receives its chunk from everyone
+    qt = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
+                            tiled=False)          # (n, chunk) peers' codes
+    scales = jax.lax.all_gather(scale, axis_name)  # (n,)
+    part = jnp.sum(qt.astype(jnp.float32) * scales[:, None], axis=0) / n
+    # all-gather the (re-quantized) reduced chunks
+    pq, ps = _quant_int8(part)
+    full_q = jax.lax.all_gather(pq, axis_name)     # (n, chunk)
+    full_s = jax.lax.all_gather(ps, axis_name)     # (n,)
+    out = (full_q.astype(jnp.float32) * full_s[:, None]).reshape(shape)
+    return out, new_err
+
+
+def tree_ef_allreduce_mean(grads, errs, axis_name: str):
+    """Apply EF-int8 mean-allreduce leafwise (pads each leaf to axis size)."""
+    n_ax = None
+
+    def one(g, e):
+        nonlocal n_ax
+        n = jax.lax.axis_size(axis_name)
+        numel = 1
+        for s in g.shape:
+            numel *= s
+        pad = (-numel) % n
+        gf = jnp.concatenate([g.reshape(-1).astype(jnp.float32),
+                              jnp.zeros((pad,), jnp.float32)])
+        ef = jnp.concatenate([e.reshape(-1).astype(jnp.float32),
+                              jnp.zeros((pad,), jnp.float32)])
+        out, ne = ef_int8_allreduce_mean(gf, ef, axis_name)
+        return (out[:numel].reshape(g.shape),
+                ne[:numel].reshape(g.shape).astype(e.dtype))
+
+    outs = jax.tree.map(one, grads, errs)
+    new_g = jax.tree.map(lambda t: t[0], outs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda t: t[1], outs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_e

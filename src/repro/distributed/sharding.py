@@ -1,0 +1,199 @@
+"""Sharding rules: param/batch/cache PartitionSpecs for the 2D (+pod) mesh.
+
+Strategy (maps the paper's 2D NCE-array dataflow onto the device mesh):
+  * weights: FSDP over ``data`` on the contraction dim x TP over ``model``
+    on the output/head/ff dim — "spatial reuse of weights" becomes
+    per-layer all-gather amortized over the batch.
+  * activations/batch: batch over ``data``.
+  * neuron state (KV cache / SSM state): resident, sharded over both axes —
+    "temporal reuse of membrane potentials" = state never leaves the chip.
+  * pod axis: pure DP (gradients cross pods once per step); specs place it
+    in front of ``data`` for batch-like tensors via the `dp_axes` tuple.
+
+Every rule checks divisibility — a dim that doesn't divide the axis stays
+replicated (GSPMD could pad, but predictable layouts beat padded ones).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= _axis_size(mesh, n)
+        return out
+    return mesh.shape[name]
+
+
+def _fits(mesh: Mesh, dim: int, axis) -> bool:
+    return dim % _axis_size(mesh, axis) == 0 and dim >= _axis_size(mesh, axis)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+# --- sharding variant ---------------------------------------------------------
+# "train": FSDP x TP (ZeRO-style) — optimizer state forces weight sharding
+#          over both axes; weights are all-gathered per layer inside the scan.
+# "serve": TP-only — inference holds no optimizer state, so weights fit
+#          model-sharded and the per-layer FSDP all-gathers disappear from
+#          the serve path entirely (§Perf iteration).
+_VARIANT = "train"
+
+
+def set_variant(name: str) -> None:
+    global _VARIANT
+    if name not in ("train", "serve"):
+        raise ValueError(name)
+    _VARIANT = name
+
+
+def get_variant() -> str:
+    return _VARIANT
+
+
+# --- parameter rules --------------------------------------------------------
+# (regex on path, spec for the TRAILING dims — a leading layer-stack dim is
+#  auto-prepended as None)
+_PARAM_RULES = [
+    (r"embed$", ("model", None)),            # vocab sharded (memory + logits)
+    (r"lm_head/w$", ("data", "model")),
+    (r"vision_proj/w$", ("data", "model")),
+    (r"attn/w[qkv]/w$", ("data", "model")),
+    (r"attn/w[qkv]/b$", ("model",)),
+    (r"attn/wo/w$", ("model", "data")),
+    (r"attn/wo/b$", (None,)),
+    (r"xattn/w[qkv]/w$", ("data", "model")),
+    (r"xattn/w[qkv]/b$", ("model",)),
+    (r"xattn/wo/w$", ("model", "data")),
+    (r"xattn/wo/b$", (None,)),
+    (r"mlp/w[ig]/w$", ("data", "model")),
+    (r"mlp/wo/w$", ("model", "data")),
+    (r"mlp/router$", (None, None)),
+    (r"mlp/w[ig]$", (None, "data", "model")),   # moe stacked (E, d, f)
+    (r"mlp/wo$", (None, "model", "data")),      # moe stacked (E, f, d)
+    (r"mlp/shared_w[ig]$", ("data", "model")),
+    (r"mlp/shared_wo$", ("model", "data")),
+    (r"ssm/in_proj/w$", ("data", "model")),
+    (r"ssm/out_proj/w$", ("model", "data")),
+    (r"ssm/conv_w$", (None, "model")),
+    (r"ssm/conv_b$", ("model",)),
+    (r"ssm/(A_log|dt_bias|D)$", ("model",)),
+    (r"ssm/norm_g$", ("model",)),
+    (r"mix_scale$", (None, None)),
+]
+
+
+def param_spec(path, leaf, mesh: Mesh, *, stacked_depth: int = 1) -> P:
+    """PartitionSpec for one param leaf.  Layer-stacked params (leading
+    n_layers dim) get None on the stack dim; rules cover trailing dims."""
+    ps = _path_str(path)
+    shape = leaf.shape
+    for pat, trailing in _PARAM_RULES:
+        if re.search(pat, ps):
+            if _VARIANT == "serve":
+                # drop the FSDP ('data') factor: weights stay TP-sharded
+                trailing = tuple(None if a == "data" else a
+                                 for a in trailing)
+            n_lead = len(shape) - len(trailing)
+            spec = [None] * n_lead + [
+                a if a is not None and _fits(mesh, shape[n_lead + i], a)
+                else None
+                for i, a in enumerate(trailing)
+            ]
+            return P(*spec)
+    # fallback: replicate small things (norms, scalars)
+    return P(*([None] * len(shape)))
+
+
+def param_specs(params_shape, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: param_spec(p, l, mesh), params_shape
+    )
+
+
+# --- batch / cache rules ----------------------------------------------------
+
+def batch_spec(name: str, shape, mesh: Mesh, dp_axes=("data",)) -> P:
+    """tokens/labels (B, S); frames/vision_embeds (B, S, d)."""
+    b = shape[0]
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    first = dp if _fits(mesh, b, dp) else (
+        dp_axes[0] if _fits(mesh, b, dp_axes[0]) else None
+    )
+    rest = [None] * (len(shape) - 1)
+    return P(first, *rest)
+
+
+def cache_entry_spec(name: str, shape, mesh: Mesh, dp_axes=("data",)) -> P:
+    """KV cache (L, B, S, K, hd) / conv (L, B, W, C) / ssm (L, B, nh, hp, N).
+
+    Greedy: B takes data if divisible; model goes to the first divisible of
+    the preferred dims; leftover axes stack onto the seq dim when possible.
+    """
+    if name == "len" or len(shape) == 0:
+        return P()
+    dims = list(shape)
+    spec: list = [None] * len(dims)
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    used_data = False
+    # dim 1 is batch for all cache entries
+    if len(dims) >= 2 and _fits(mesh, dims[1], dp):
+        spec[1] = dp
+        used_data = True
+    if name in ("k", "v", "xk", "xv", "k_scale", "v_scale"):
+        L_, B_, S_, K_, hd_ = dims
+        if _fits(mesh, K_, "model"):
+            spec[3] = "model"
+        elif not used_data and _fits(mesh, S_, ("model",) + tuple(dp_axes)):
+            spec[2] = ("model",) + tuple(dp_axes)
+        elif _fits(mesh, S_, "model"):
+            spec[2] = "model"
+        if not used_data and spec[2] is None and _fits(mesh, S_, dp):
+            spec[2] = dp
+    elif name == "ssm":
+        L_, B_, nh_, hp_, N_ = dims
+        if _fits(mesh, nh_, "model"):
+            spec[2] = "model"
+        elif _fits(mesh, hp_, "model"):
+            spec[3] = "model"
+        if not used_data:
+            if spec[3] is None and _fits(mesh, hp_, dp):
+                spec[3] = dp
+            elif _fits(mesh, N_, dp):
+                spec[4] = dp
+    elif name == "conv":
+        if _fits(mesh, dims[-1], "model"):
+            spec[-1] = "model"
+    return P(*spec)
+
+
+def cache_specs(cache_shape, mesh: Mesh, dp_axes=("data",)):
+    return {
+        k: cache_entry_spec(k, v.shape, mesh, dp_axes)
+        for k, v in cache_shape.items()
+    }
+
+
+def opt_state_specs(pspecs, mesh: Mesh):
+    return {
+        "m": pspecs,
+        "v": jax.tree.map(lambda s: s, pspecs),
+        "step": P(),
+    }
+
+
+def to_shardings(specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for L-SPINE's compute hot-spots.
+
+Three kernels, each with <name>/kernel.py (pl.pallas_call + BlockSpec),
+ops.py (backend-dispatched public API) and ref.py (pure-jnp oracle):
+
+  packed_qmatmul — SIMD multi-precision packed-weight matmul (the datapath)
+  lif_step       — fused shift-add LIF membrane update (the neuron)
+  spike_matmul   — bit-packed spike x quantized weight accumulate (the AC unit)
+"""
+
+from repro.kernels.backend import get_backend, set_backend, use_backend
+from repro.kernels.lif_step import ops as lif_step_ops
+from repro.kernels.packed_qmatmul import ops as packed_qmatmul_ops
+from repro.kernels.spike_matmul import ops as spike_matmul_ops
+
+__all__ = [
+    "get_backend",
+    "set_backend",
+    "use_backend",
+    "lif_step_ops",
+    "packed_qmatmul_ops",
+    "spike_matmul_ops",
+]

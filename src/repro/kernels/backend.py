@@ -1,0 +1,51 @@
+"""Kernel backend selection.
+
+'pallas'    — compiled Pallas TPU kernels (real hardware target)
+'interpret' — Pallas kernels in interpret mode (CPU correctness runs)
+'jnp'       — pure-jnp reference path, identical math & packed storage
+              (used for full-model CPU smoke tests and the dry-run lowering;
+              roofline byte counts still reflect packed weights)
+
+Default: 'jnp' on CPU hosts, 'pallas' when a TPU is present.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_BACKEND: str | None = None
+_VALID = ("pallas", "interpret", "jnp")
+
+
+def default_backend() -> str:
+    try:
+        plat = jax.default_backend()
+    except Exception:  # pragma: no cover
+        plat = "cpu"
+    return "pallas" if plat == "tpu" else "jnp"
+
+
+def get_backend() -> str:
+    global _BACKEND
+    if _BACKEND is None:
+        _BACKEND = default_backend()
+    return _BACKEND
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    if name not in _VALID:
+        raise ValueError(f"backend must be one of {_VALID}, got {name!r}")
+    _BACKEND = name
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    prev = get_backend()
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)

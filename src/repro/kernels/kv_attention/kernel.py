@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: decode attention over a sub-word packed KV cache.
+
+The serving-side twin of packed_qmatmul: K/V travel HBM->VMEM as int32
+words (8x INT4 / 16x INT2 per word) plus per-(position, head) scales, are
+unpacked with VPU shift/mask ops inside VMEM and fed to the MXU — so the
+per-step HBM traffic of batched decode drops by ~4x (INT4) / ~8x (INT2)
+versus a bf16 cache.  This is L-SPINE's bandwidth thesis applied to the
+dominant buffer of LM inference.
+
+Grid: (B*K, S/bs) — one program per (batch, kv-head) x key-block, online
+softmax across key blocks (same flash-decoding shape as layers.py).
+Block: q (G, hd) resident; K/V blocks (bs, hd*bits/32) words + (bs, 1)
+scales.  bs=512 keeps the unpacked (bs, hd) tile ~128 KB in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import packing
+
+NEG_INF = -2.0e38
+
+
+def _unpack_tile(words, scales, bits, hd):
+    """(bs, hd*bits/32) int32 + (bs, 1) f32 -> (bs, hd) f32."""
+    vpw = packing.WORD_BITS // bits
+    offs = jnp.arange(vpw, dtype=jnp.int32) * bits
+    fields = (words[:, :, None] >> offs[None, None, :]) & ((1 << bits) - 1)
+    q = fields.reshape(words.shape[0], words.shape[1] * vpw)
+    q = (q - (1 << (bits - 1))).astype(jnp.float32)
+    return q[:, :hd] * scales
+
+
+def _kv_attn_kernel(q_ref, kp_ref, ks_ref, vp_ref, vs_ref, len_ref,
+                    o_ref, m_ref, l_ref, acc_ref, *,
+                    bits: int, hd: int, bs: int, scale: float,
+                    n_blocks: int):
+    blk = pl.program_id(1)
+
+    @pl.when(blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    G = q_ref.shape[2]
+    hd_ = q_ref.shape[3]
+    q = q_ref[...].reshape(G, hd_).astype(jnp.float32)       # (G, hd)
+    kw = kp_ref[...].reshape(bs, -1)
+    ksc = ks_ref[...].reshape(bs, 1)
+    k = _unpack_tile(kw, ksc, bits, hd)                      # (bs, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                                # (G, bs)
+    clen = len_ref[0]
+    kj = blk * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    s = jnp.where(kj < clen, s, NEG_INF)
+
+    m_prev = m_ref[...].reshape(G, 1)
+    m_blk = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_blk)
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+    l_new = l_ref[...].reshape(G, 1) * corr + jnp.sum(p, axis=-1,
+                                                      keepdims=True)
+    vw = vp_ref[...].reshape(bs, -1)
+    vsc = vs_ref[...].reshape(bs, 1)
+    v = _unpack_tile(vw, vsc, bits, hd)                      # (bs, hd)
+    o_blk = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                        # (G, hd)
+    acc = acc_ref[...].reshape(G, hd_) * corr + o_blk
+    acc_ref[...] = acc.reshape(acc_ref.shape)
+    m_ref[...] = m_new.reshape(m_ref.shape)
+    l_ref[...] = l_new.reshape(l_ref.shape)
+
+    @pl.when(blk == n_blocks - 1)
+    def _fin():
+        out = (acc_ref[...].reshape(G, hd_) /
+               jnp.maximum(l_ref[...].reshape(G, 1), 1e-20))
+        o_ref[...] = out.reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "scale", "bs", "interpret"))
+def quant_kv_decode_attention_pallas(
+    q: jnp.ndarray,          # (B, K, G, hd)
+    k_packed: jnp.ndarray,   # (B, S, K, w) int32
+    k_scale: jnp.ndarray,    # (B, S, K, 1) f32
+    v_packed: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    lens: jnp.ndarray,       # (B,) int32
+    *,
+    bits: int,
+    scale: float,
+    bs: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, K, G, hd = q.shape
+    S = k_packed.shape[1]
+    w = k_packed.shape[3]
+    if S % bs:
+        raise ValueError("cache length must divide block size (pad cache)")
+    n_blocks = S // bs
+    grid = (B * K, n_blocks)
+
+    kernel = functools.partial(
+        _kv_attn_kernel, bits=bits, hd=hd, bs=bs, scale=scale,
+        n_blocks=n_blocks,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda i, j: (i // K, i % K, 0, 0)),
+            pl.BlockSpec((1, bs, 1, w),
+                         lambda i, j: (i // K, j, i % K, 0)),
+            pl.BlockSpec((1, bs, 1, 1),
+                         lambda i, j: (i // K, j, i % K, 0)),
+            pl.BlockSpec((1, bs, 1, w),
+                         lambda i, j: (i // K, j, i % K, 0)),
+            pl.BlockSpec((1, bs, 1, 1),
+                         lambda i, j: (i // K, j, i % K, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i // K,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda i, j: (i // K, i % K, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda i, j: (i // K, i % K, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda i, j: (i // K, i % K, 0, 0)),
+            pl.BlockSpec((1, 1, G, hd), lambda i, j: (i // K, i % K, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, K, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_packed, k_scale, v_packed, v_scale, lens)
+    return out[0]

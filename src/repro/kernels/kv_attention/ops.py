@@ -1,0 +1,46 @@
+"""Public entry point for packed-KV decode attention (backend-dispatched)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import backend as _backend
+from repro.kernels.kv_attention import kernel as _kernel
+from repro.kernels.kv_attention import ref as _ref
+
+
+def quant_kv_decode_attention(
+    q: jnp.ndarray,            # (B, 1, H, hd)
+    k_packed: jnp.ndarray,     # (B, S, K, hd*bits/32) int32
+    k_scale: jnp.ndarray,      # (B, S, K, 1) f32
+    v_packed: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    *,
+    bits: int,
+    scale: float,
+    cache_len,
+    window=0,
+    logit_cap: Optional[float] = None,
+) -> jnp.ndarray:
+    be = _backend.get_backend()
+    B, _, H, hd = q.shape
+    S, K = k_packed.shape[1], k_packed.shape[2]
+    # the Pallas kernel covers the global-attention fast path; windowed /
+    # softcapped variants run the reference math
+    if (be == "jnp" or logit_cap is not None
+            or not isinstance(window, int) or window != 0 or S % 512):
+        return _ref.quant_kv_decode_attention_ref(
+            q, k_packed, k_scale, v_packed, v_scale, bits=bits, scale=scale,
+            cache_len=cache_len, window=window, logit_cap=logit_cap,
+        )
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    lens = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
+    out = _kernel.quant_kv_decode_attention_pallas(
+        qg, k_packed, k_scale, v_packed, v_scale, lens,
+        bits=bits, scale=scale, interpret=(be == "interpret"),
+    )
+    return out.reshape(B, 1, H, hd)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for decode attention over a PACKED quantized KV cache.
+
+The L-SPINE move applied to LM serving: the KV cache — the dominant HBM
+traffic of batched decode — is stored sub-word packed (INT4/INT2 along
+head_dim, per-(position, head) absmax scales) and dequantized on the fly.
+Semantics here define what the Pallas kernel must match.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+NEG_INF = -2.0e38
+
+
+def quantize_kv(x: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (..., hd) -> (packed int32 (..., hd*bits/32), scale (..., 1) f32).
+
+    Symmetric absmax over head_dim — one scale per (position, head).
+    """
+    qmax = (1 << (bits - 1)) - 1
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax / qmax, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax - 1, qmax)
+    return packing.pack(q.astype(jnp.int32), bits), scale.astype(jnp.float32)
+
+
+def dequantize_kv(packed: jnp.ndarray, scale: jnp.ndarray, bits: int,
+                  hd: int, dtype=jnp.bfloat16) -> jnp.ndarray:
+    q = packing.unpack(packed, bits, hd).astype(jnp.float32)
+    return (q * scale).astype(dtype)
+
+
+def quant_kv_decode_attention_ref(
+    q: jnp.ndarray,            # (B, 1, H, hd) bf16
+    k_packed: jnp.ndarray,     # (B, S, K, hd*bits/32) int32
+    k_scale: jnp.ndarray,      # (B, S, K, 1) f32
+    v_packed: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    *,
+    bits: int,
+    scale: float,
+    cache_len,
+    window=0,
+    logit_cap: Optional[float] = None,
+) -> jnp.ndarray:
+    B, _, H, hd = q.shape
+    S, K = k_packed.shape[1], k_packed.shape[2]
+    G = H // K
+    k = dequantize_kv(k_packed, k_scale, bits, hd)
+    v = dequantize_kv(v_packed, v_scale, bits, hd)
+    qg = q.reshape(B, K, G, hd).astype(k.dtype)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if logit_cap is not None:
+        s = jnp.tanh(s / logit_cap) * logit_cap
+    kj = jnp.arange(S, dtype=jnp.int32)[None, :]
+    clen = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1, 1), (B, 1))
+    qi = clen - 1
+    w = jnp.asarray(window, jnp.int32)
+    ok = (kj < clen) & ((w == 0) | (kj > qi - w))
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)

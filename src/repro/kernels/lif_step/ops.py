@@ -1,0 +1,43 @@
+"""Public entry point for the fused LIF step (backend-dispatched)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels import backend as _backend
+from repro.kernels.lif_step import kernel as _kernel
+from repro.kernels.lif_step import ref as _ref
+
+
+def lif_step(
+    v: jnp.ndarray,
+    i_syn: jnp.ndarray,
+    *,
+    leak_shift: int,
+    threshold_q: int,
+    v_reset_q: int = 0,
+    soft_reset: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused integer LIF update; v/i_syn any shape (..., n)."""
+    be = _backend.get_backend()
+    if be == "jnp":
+        return _ref.lif_step_ref(
+            v, i_syn, leak_shift=leak_shift, threshold_q=threshold_q,
+            v_reset_q=v_reset_q, soft_reset=soft_reset,
+        )
+
+    shape = v.shape
+    v2 = v.reshape(-1, shape[-1]).astype(jnp.int32)
+    i2 = i_syn.reshape(-1, shape[-1]).astype(jnp.int32)
+    m, n = v2.shape
+    bm = 8 if m % 8 == 0 else 1
+    bn = 512 if n % 512 == 0 else (128 if n % 128 == 0 else n)
+    v3, s3 = _kernel.lif_step_pallas(
+        v2, i2,
+        leak_shift=leak_shift, threshold_q=threshold_q,
+        v_reset_q=v_reset_q, soft_reset=soft_reset,
+        bm=bm, bn=bn, interpret=(be == "interpret"),
+    )
+    return v3.reshape(shape), s3.reshape(shape)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused integer LIF step (shift-add dynamics)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def lif_step_ref(
+    v: jnp.ndarray,        # (..., n) int32 membrane
+    i_syn: jnp.ndarray,    # (..., n) int32 synaptic current
+    *,
+    leak_shift: int,
+    threshold_q: int,
+    v_reset_q: int = 0,
+    soft_reset: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (v', spikes int32 {0,1}).  Bit-exact integer semantics:
+
+        v' = v - (v >> k) + i_syn        (arithmetic shift = RTL barrel shift)
+        s  = v' >= theta
+        v' = v' - s * theta              (soft reset)  |  v_reset (hard)
+    """
+    v = v.astype(jnp.int32)
+    v = v - (v >> leak_shift) + i_syn.astype(jnp.int32)
+    s = (v >= threshold_q).astype(jnp.int32)
+    if soft_reset:
+        v = v - s * threshold_q
+    else:
+        v = jnp.where(s == 1, jnp.int32(v_reset_q), v)
+    return v, s

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: packed low-bit weight matmul with in-VMEM dequant.
+
+This is the TPU realization of L-SPINE's SIMD multi-precision datapath:
+weights travel HBM->VMEM as packed int32 words (16x INT2 / 8x INT4 /
+4x INT8 per word — the sub-word SIMD payload), are unpacked with VPU
+shift/mask ops inside VMEM, dequantized with per-channel/group scales,
+and fed to the MXU.  HBM weight traffic therefore drops by 32/bits vs
+fp32 (8/bits vs int8), which is precisely the memory-roofline win the
+FPGA design gets from its packed datapath.
+
+Tiling (v5e targets):
+  grid = (M/bm, N/bn, K/bk); K innermost so the (bm, bn) fp32 accumulator
+  tile stays resident in VMEM across the contraction.
+  x tile:        (bm, bk)            VMEM
+  w_packed tile: (bn, bk*bits/32)    VMEM (int32 words)
+  scale tile:    (bn, groups_in_bk)  VMEM
+  out tile:      (bm, bn)            VMEM, written on the last K step
+
+Defaults bm=bn=bk=128 keep every MXU dim at the 128-lane boundary and the
+working set (128*128*(4+4) + packed) well under VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import packing
+from repro.quant.formats import QuantizedTensor
+
+
+def _unpack_block(words: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(bn, bkw) int32 words -> (bn, bkw * 32/bits) signed int32 codes."""
+    vpw = packing.WORD_BITS // bits
+    offs = jnp.arange(vpw, dtype=jnp.int32) * bits
+    fields = (words[:, :, None] >> offs[None, None, :]) & ((1 << bits) - 1)
+    out = fields.reshape(words.shape[0], words.shape[1] * vpw)
+    return out - (1 << (bits - 1))
+
+
+def _qmatmul_kernel(x_ref, w_ref, s_ref, o_ref, *, bits: int, n_k: int,
+                    group_size: int, bk: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (bm, bk)
+    wq = _unpack_block(w_ref[...], bits)          # (bn, bk) int codes
+    s = s_ref[...]                                # (bn, g_in_bk)
+    g_in_bk = s.shape[1]
+    # dequant in VMEM: per-group scale along the contraction
+    wf = wq.reshape(wq.shape[0], g_in_bk, bk // g_in_bk).astype(jnp.float32)
+    wf = (wf * s[:, :, None]).reshape(wq.shape[0], bk)  # (bn, bk)
+    acc = jax.lax.dot_general(
+        x, wf,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                              # (bm, bn)
+    o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "group_size", "bm", "bn", "bk", "interpret"),
+)
+def qmatmul_pallas(
+    x: jnp.ndarray,          # (m, k) float
+    w_packed: jnp.ndarray,   # (n, k*bits/32) int32
+    scale: jnp.ndarray,      # (n, n_groups) float32
+    *,
+    bits: int,
+    group_size: int,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    m, k = x.shape
+    n = w_packed.shape[0]
+    vpw = packing.WORD_BITS // bits
+    gs = k if group_size == -1 else group_size
+    if bk % vpw or bk % gs and gs % bk:
+        raise ValueError(f"bk={bk} incompatible with vpw={vpw}, group={gs}")
+    if m % bm or n % bn or k % bk:
+        raise ValueError("caller (ops.py) must pad to tile multiples")
+    bkw = bk // vpw
+    # scale tile: groups overlapping this k-block
+    g_in_bk = max(1, bk // gs)
+
+    if gs <= bk:
+        # block width = bk//gs groups; block kk starts at group kk*bk/gs
+        def s_index(i, j, kk):
+            return (j, kk)
+    else:
+        # one group spans several k blocks; block width = 1 group
+        def s_index(i, j, kk):
+            return (j, (kk * bk) // gs)
+
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(
+        _qmatmul_kernel, bits=bits, n_k=grid[2], group_size=gs, bk=bk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bkw), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, g_in_bk), s_index),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w_packed, scale)

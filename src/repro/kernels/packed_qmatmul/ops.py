@@ -1,0 +1,72 @@
+"""Public entry point for the packed-weight matmul (backend-dispatched)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.kernels import backend as _backend
+from repro.kernels.packed_qmatmul import kernel as _kernel
+from repro.kernels.packed_qmatmul import ref as _ref
+from repro.quant.formats import QuantizedTensor
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def qmatmul(
+    x: jnp.ndarray,
+    qt: QuantizedTensor,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jnp.ndarray:
+    """``x @ dequant(qt).T`` — x: (..., k); qt packed (n, k); out (..., n).
+
+    Routes to the Pallas kernel or the jnp oracle per the active backend.
+    Asymmetric (zero-point) tensors always use the reference path; the
+    deployment format of the engine is symmetric (zero folded away), as in
+    the paper.
+    """
+    be = _backend.get_backend()
+    if be == "jnp" or qt.zero is not None:
+        return _ref.qmatmul_ref(x, qt)
+
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = qt.shape[0]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+
+    vpw = packing.values_per_word(qt.bits)
+    x2 = _pad_to(_pad_to(x2, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(qt.data, 0, bn), 1, bk // vpw)
+    gs = k if qt.group_size == -1 else qt.group_size
+    # pad scale's group axis to match padded k
+    k_pad = x2.shape[1]
+    n_groups_pad = max(1, k_pad // gs) if gs <= bk else qt.scale.shape[1]
+    sc = qt.scale
+    sc = _pad_to(sc, 0, bn)
+    if sc.shape[1] < n_groups_pad:
+        sc = _pad_to(sc, 1, n_groups_pad)
+
+    out = _kernel.qmatmul_pallas(
+        x2,
+        wp,
+        sc,
+        bits=qt.bits,
+        group_size=qt.group_size if qt.group_size != -1 else k_pad,
+        bm=bm,
+        bn=bn,
+        bk=bk,
+        interpret=(be == "interpret"),
+    )
+    return out[:m, :n].reshape(*lead, n).astype(x.dtype)

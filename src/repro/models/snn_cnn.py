@@ -1,0 +1,262 @@
+"""The paper's benchmark models: VGG-16-SNN and ResNet-18-SNN.
+
+These are the networks behind L-SPINE's §III-D comparison (VGG-16:
+CPU 23.97 s vs engine 4.83 ms INT2 / 16.94 ms INT8; ResNet-18: 34.43 s
+vs 7.84/16.84 ms).  Spiking convolutional stacks with shift-add LIF
+dynamics, trainable by BPTT + surrogate gradients, quantizable to the
+packed L-SPINE format.
+
+``scale`` shrinks every channel count (scale=1 is the paper-size model;
+smoke tests use scale≈1/16).  Input: (B, H, W, C) analog images, encoded
+with direct (constant-current) coding over T timesteps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import LIFConfig
+from repro.core.snn_layers import (
+    avgpool_t,
+    conv_init,
+    dense_init,
+    readout_apply,
+    spiking_conv_apply,
+    spiking_dense_apply,
+)
+from repro.quant.formats import PrecisionConfig
+
+VGG16_PLAN = [64, 64, "P", 128, 128, "P", 256, 256, 256, "P",
+              512, 512, 512, "P", 512, 512, 512, "P"]
+# shallow variant for quantization sweeps: BPTT through 13 thresholded
+# layers is noisy at small step budgets; 5 convs isolate the precision
+# effect (benchmarks/fig45)
+VGG9_PLAN = [64, 64, "P", 128, 128, "P", 256, "P"]
+RESNET18_STAGES = [(64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2)]
+
+
+def effective_plan(img_size: int, base_plan=None):
+    """VGG plan with pools dropped once the spatial dim reaches 2 — lets
+    reduced smoke configs (img 16) share the paper-size definition."""
+    plan, hw = [], img_size
+    for item in (base_plan if base_plan is not None else VGG16_PLAN):
+        if item == "P":
+            if hw <= 2:
+                continue
+            hw //= 2
+        plan.append(item)
+    return plan
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNConfig:
+    model: str = "vgg16"          # vgg16 | vgg9 | resnet18
+    n_classes: int = 10
+    in_channels: int = 3
+    img_size: int = 32
+    timesteps: int = 4
+    scale: float = 1.0
+    lif: LIFConfig = LIFConfig(leak_shift=3, threshold=1.0)
+    precision: PrecisionConfig = PrecisionConfig(bits=16)
+
+    def ch(self, c: int) -> int:
+        return max(8, int(c * self.scale))
+
+
+# ---------------------------------------------------------------------------
+# VGG-16 SNN
+# ---------------------------------------------------------------------------
+
+def _base_plan(cfg):
+    return VGG9_PLAN if cfg.model == "vgg9" else VGG16_PLAN
+
+
+def vgg_init(key, cfg: SNNConfig):
+    params = {"convs": []}
+    c_in = cfg.in_channels
+    plan = effective_plan(cfg.img_size, _base_plan(cfg))
+    keys = jax.random.split(key, len(plan) + 2)
+    i = 0
+    for item in plan:
+        if item == "P":
+            continue
+        c_out = cfg.ch(item)
+        params["convs"].append(conv_init(keys[i], c_in, c_out, 3))
+        c_in = c_out
+        i += 1
+    n_pool = plan.count("P")
+    feat = (cfg.img_size // (2**n_pool)) ** 2 * c_in
+    params["fc1"] = dense_init(keys[-2], feat, cfg.ch(512))
+    params["head"] = dense_init(keys[-1], cfg.ch(512), cfg.n_classes)
+    return params
+
+
+def vgg_apply(params, cfg: SNNConfig, images: jnp.ndarray) -> jnp.ndarray:
+    """images: (B, H, W, C) in [0,1].  Returns logits (B, n_classes)."""
+    pc = cfg.precision if cfg.precision.quantized else None
+    x = jnp.broadcast_to(images, (cfg.timesteps, *images.shape))
+    ci = 0
+    for item in effective_plan(cfg.img_size, _base_plan(cfg)):
+        if item == "P":
+            x = avgpool_t(x)
+        else:
+            x = spiking_conv_apply(params["convs"][ci], x, cfg.lif, pc)
+            ci += 1
+    T, B = x.shape[0], x.shape[1]
+    x = x.reshape(T, B, -1)
+    x = spiking_dense_apply(params["fc1"], x, cfg.lif, pc)
+    return readout_apply(params["head"], x)
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 SNN
+# ---------------------------------------------------------------------------
+
+def resnet_init(key, cfg: SNNConfig):
+    keys = iter(jax.random.split(key, 64))
+    params = {"stem": conv_init(next(keys), cfg.in_channels, cfg.ch(64), 3)}
+    c_in = cfg.ch(64)
+    blocks = []
+    for c_base, n_blocks, stride in RESNET18_STAGES:
+        c_out = cfg.ch(c_base)
+        for b in range(n_blocks):
+            s = stride if b == 0 else 1
+            blk = {
+                "conv1": conv_init(next(keys), c_in, c_out, 3),
+                "conv2": conv_init(next(keys), c_out, c_out, 3),
+            }
+            if s != 1 or c_in != c_out:
+                blk["proj"] = conv_init(next(keys), c_in, c_out, 1)
+            blk["stride"] = s
+            blocks.append(blk)
+            c_in = c_out
+    params["blocks"] = blocks
+    params["head"] = dense_init(next(keys), c_in, cfg.n_classes)
+    return params
+
+
+def resnet_apply(params, cfg: SNNConfig, images: jnp.ndarray) -> jnp.ndarray:
+    pc = cfg.precision if cfg.precision.quantized else None
+    x = jnp.broadcast_to(images, (cfg.timesteps, *images.shape))
+    x = spiking_conv_apply(params["stem"], x, cfg.lif, pc)
+    for blk in params["blocks"]:
+        s = blk["stride"]
+        h = spiking_conv_apply(blk["conv1"], x, cfg.lif, pc, stride=s)
+        h = spiking_conv_apply(blk["conv2"], h, cfg.lif, pc)
+        sc = x
+        if "proj" in blk:
+            sc = spiking_conv_apply(blk["proj"], x, cfg.lif, pc, stride=s)
+        x = (h + sc) * 0.5   # spike-rate-preserving residual merge
+    x = jnp.mean(x, axis=(2, 3))            # (T, B, C) global avg pool
+    return readout_apply(params["head"], x)
+
+
+def init(key, cfg: SNNConfig):
+    return (resnet_init if cfg.model == "resnet18" else vgg_init)(key, cfg)
+
+
+# ---------------------------------------------------------------------------
+# threshold balancing (Diehl-style): deep direct-encoded SNNs suffer
+# activity collapse (firing rates decay ~4x per thresholded layer).  We
+# calibrate each layer's per-channel current gain "g" on one batch so the
+# pre-threshold current std sits at ~threshold, keeping every layer in a
+# healthy firing regime.  g stays a learnable parameter afterwards.
+# ---------------------------------------------------------------------------
+
+def _balance(i_syn_t, g_shape, threshold, target=1.1):
+    red = tuple(range(i_syn_t.ndim - 1))
+    std = jnp.std(i_syn_t, axis=red) + 1e-6
+    return jnp.clip(target * threshold / std, 0.05, 100.0)
+
+
+def calibrate(params, cfg: SNNConfig, images):
+    """Returns params with balanced per-layer gains (one fwd pass)."""
+    from repro.core.snn_layers import _conv2d
+
+    th = cfg.lif.threshold
+    x = jnp.broadcast_to(images, (cfg.timesteps, *images.shape))
+
+    def conv_gain(p, x, stride=1):
+        w = p["w"]
+        i = jax.vmap(lambda xx: _conv2d(xx.astype(w.dtype), w,
+                                        stride=stride))(x)
+        return _balance(i, p["g"].shape, th)
+
+    if cfg.model != "resnet18":
+        ci = 0
+        for item in effective_plan(cfg.img_size, _base_plan(cfg)):
+            if item == "P":
+                x = avgpool_t(x)
+                continue
+            g = conv_gain(params["convs"][ci], x)
+            params["convs"][ci] = dict(params["convs"][ci], g=g)
+            x = spiking_conv_apply(params["convs"][ci], x, cfg.lif)
+            ci += 1
+        T, B = x.shape[0], x.shape[1]
+        x = x.reshape(T, B, -1)
+        i = jnp.einsum("tbi,io->tbo", x, params["fc1"]["w"])
+        params["fc1"] = dict(params["fc1"],
+                             g=_balance(i, params["fc1"]["g"].shape, th))
+        return params
+
+    g = conv_gain(params["stem"], x)
+    params["stem"] = dict(params["stem"], g=g)
+    x = spiking_conv_apply(params["stem"], x, cfg.lif)
+    for bi, blk in enumerate(params["blocks"]):
+        s = blk["stride"]
+        blk = dict(blk)
+        blk["conv1"] = dict(blk["conv1"],
+                            g=conv_gain(blk["conv1"], x, stride=s))
+        h = spiking_conv_apply(blk["conv1"], x, cfg.lif, stride=s)
+        blk["conv2"] = dict(blk["conv2"], g=conv_gain(blk["conv2"], h))
+        h = spiking_conv_apply(blk["conv2"], h, cfg.lif)
+        sc = x
+        if "proj" in blk:
+            blk["proj"] = dict(blk["proj"],
+                               g=conv_gain(blk["proj"], x, stride=s))
+            sc = spiking_conv_apply(blk["proj"], x, cfg.lif, stride=s)
+        x = (h + sc) * 0.5
+        params["blocks"][bi] = blk
+    return params
+
+
+def apply(params, cfg: SNNConfig, images):
+    return (resnet_apply if cfg.model == "resnet18" else vgg_apply)(
+        params, cfg, images)
+
+
+def count_macs(cfg: SNNConfig) -> int:
+    """Synaptic-op count per inference (one timestep) — feeds the paper's
+    latency/energy model in benchmarks/."""
+    macs = 0
+    hw = cfg.img_size
+    c_in = cfg.in_channels
+    if cfg.model != "resnet18":
+        for item in effective_plan(cfg.img_size, _base_plan(cfg)):
+            if item == "P":
+                hw //= 2
+            else:
+                c_out = cfg.ch(item)
+                macs += hw * hw * 9 * c_in * c_out
+                c_in = c_out
+        macs += (hw * hw * c_in) * cfg.ch(512) + cfg.ch(512) * cfg.n_classes
+    else:
+        c = cfg.ch(64)
+        macs += hw * hw * 9 * cfg.in_channels * c
+        c_in = c
+        for c_base, n_blocks, stride in RESNET18_STAGES:
+            c_out = cfg.ch(c_base)
+            for b in range(n_blocks):
+                s = stride if b == 0 else 1
+                hw = hw // s
+                macs += hw * hw * 9 * c_in * c_out
+                macs += hw * hw * 9 * c_out * c_out
+                if s != 1 or c_in != c_out:
+                    macs += hw * hw * c_in * c_out
+                c_in = c_out
+        macs += c_in * cfg.n_classes
+    return macs * cfg.timesteps

@@ -1,0 +1,498 @@
+"""Decoder-only LM backbone — one scanned block serves 8 of the 10 archs.
+
+Per-layer heterogeneity (gemma2's local/global alternation, hymba's few
+global layers) is expressed as *data* — a per-layer window array scanned
+alongside the stacked params — so the whole stack is a single
+``jax.lax.scan`` and HLO size is depth-independent (critical for the
+512-device dry-run compile budget).
+
+Forward modes:
+  forward_hidden  — full-sequence (train / prefill), chunked flash-style attn
+  loss_fn         — forward + seq-chunked cross-entropy (never materializes
+                    the (B, S, vocab) logits — gemma2's 256k vocab would be
+                    67 GB in fp32 otherwise)
+  prefill         — forward + KV-cache emission
+  decode_step     — single-token step against the cache
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def window_schedule(cfg: ArchConfig) -> np.ndarray:
+    """Per-layer attention window (0 = global)."""
+    w = np.zeros((cfg.n_layers,), np.int32)
+    if cfg.local_global_period:
+        for i in range(cfg.n_layers):
+            if i % cfg.local_global_period == 0:  # even layers local (gemma2)
+                w[i] = cfg.sliding_window
+    elif cfg.hybrid_parallel_ssm:
+        w[:] = cfg.sliding_window or 0
+        for i in cfg.global_attn_layers:
+            w[i] = 0
+    return w
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ArchConfig):
+    dt = _dtype(cfg)
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 12)
+    p = {
+        "ln1": L.norm_init(cfg.norm, d, dt),
+        "ln2": L.norm_init(cfg.norm, d, dt),
+    }
+    if cfg.family != "ssm":
+        p["attn"] = {
+            "wq": L.linear_init(ks[0], d, cfg.n_heads * hd, dt, cfg.qkv_bias),
+            "wk": L.linear_init(ks[1], d, cfg.n_kv * hd, dt, cfg.qkv_bias),
+            "wv": L.linear_init(ks[2], d, cfg.n_kv * hd, dt, cfg.qkv_bias),
+            "wo": L.linear_init(ks[3], cfg.n_heads * hd, d, dt),
+        }
+    if cfg.moe is not None:
+        p["mlp"] = MOE.moe_init(ks[4], d, cfg.moe, cfg.ffn, dt)
+    elif cfg.d_ff > 0:
+        p["mlp"] = L.ffn_init(ks[4], d, cfg.d_ff, cfg.ffn, dt)
+    if cfg.post_block_norms:
+        p["post_ln1"] = L.norm_init(cfg.norm, d, dt)
+        p["post_ln2"] = L.norm_init(cfg.norm, d, dt)
+    if cfg.family == "ssm" or cfg.hybrid_parallel_ssm:
+        p["ssm"] = M2.mamba2_init(ks[5], d, cfg.ssm, dt)
+        if cfg.hybrid_parallel_ssm:
+            p["mix_scale"] = jnp.ones((2, d), dt)  # learnable attn/ssm mix
+    return p
+
+
+def init(key, cfg: ArchConfig):
+    dt = _dtype(cfg)
+    k_emb, k_layers, k_head, k_vis = jax.random.split(key, 4)
+    params = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab, cfg.d_model)) * 0.02
+                  ).astype(dt),
+        "final_norm": L.norm_init(cfg.norm, cfg.d_model, dt),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(
+            jax.random.split(k_layers, cfg.n_layers)
+        ),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.linear_init(k_head, cfg.d_model, cfg.vocab, dt)
+    if cfg.vision_prefix_len:
+        params["vision_proj"] = L.linear_init(
+            k_vis, cfg.d_model, cfg.d_model, dt
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block bodies
+# ---------------------------------------------------------------------------
+
+def _attn_block(lp, cfg: ArchConfig, x, *, window, prefix_len, q_offset=0,
+                cache_kv=None, cache_len=None, ragged=False):
+    """Self-attention (full-seq or decode).  Returns (out, (k, v))."""
+    pc, mode = cfg.precision, cfg.quant_mode
+    B, S, d = x.shape
+    hd = cfg.head_dim
+    q = L.linear(lp["wq"], x, pc, mode).reshape(B, S, cfg.n_heads, hd)
+    k = L.linear(lp["wk"], x, pc, mode).reshape(B, S, cfg.n_kv, hd)
+    v = L.linear(lp["wv"], x, pc, mode).reshape(B, S, cfg.n_kv, hd)
+    off = jnp.asarray(q_offset, jnp.int32)
+    if off.ndim == 1:                      # per-slot decode offsets (B,)
+        pos = off[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    else:
+        pos = off + jnp.arange(S, dtype=jnp.int32)
+    q = L.rope(q, pos, cfg.rope_theta)
+    k = L.rope(k, pos, cfg.rope_theta)
+    scale = cfg.attn_scale if cfg.attn_scale is not None else hd**-0.5
+
+    if cache_kv is None:
+        o = L.attention(
+            q, k, v, scale=scale, causal=True, window=window,
+            prefix_len=prefix_len, logit_cap=cfg.attn_logit_softcap,
+        )
+    elif cfg.kv_cache_bits != 16:
+        from repro.kernels.kv_attention import ref as KVR
+        from repro.kernels.kv_attention.ops import quant_kv_decode_attention
+
+        if ragged:
+            raise NotImplementedError(
+                "packed KV cache + ragged slot lengths is not implemented; "
+                "serve either with kv_cache_bits=16 or uniform batches")
+        kp, ks_, vp, vs_ = cache_kv
+        bits = cfg.kv_cache_bits
+        lens = jnp.asarray(cache_len, jnp.int32).reshape(-1)
+        ins0 = lens[0] - 1
+        knew, ksc = KVR.quantize_kv(k[:, 0], bits)   # (B,K,w), (B,K,1)
+        vnew, vsc = KVR.quantize_kv(v[:, 0], bits)
+        kp = jax.lax.dynamic_update_slice(kp, knew[:, None], (0, ins0, 0, 0))
+        vp = jax.lax.dynamic_update_slice(vp, vnew[:, None], (0, ins0, 0, 0))
+        ks_ = jax.lax.dynamic_update_slice(ks_, ksc[:, None], (0, ins0, 0, 0))
+        vs_ = jax.lax.dynamic_update_slice(vs_, vsc[:, None], (0, ins0, 0, 0))
+        o = quant_kv_decode_attention(
+            q, kp, ks_, vp, vs_, bits=bits, scale=scale,
+            cache_len=cache_len, window=window,
+            logit_cap=cfg.attn_logit_softcap,
+        )
+        o = L.linear(lp["wo"], o.reshape(B, S, cfg.n_heads * hd), pc, mode)
+        return o, (kp, ks_, vp, vs_)
+    else:
+        k_cache, v_cache = cache_kv
+        lens = jnp.asarray(cache_len, jnp.int32).reshape(-1)
+        if ragged:
+            # serving engine: per-slot lengths -> per-row scatter insert.
+            # (XLA lowers this through a full-cache convert+DUS — fine for
+            # host-scale serving, never used on the production decode path)
+            ins = jnp.broadcast_to(lens, (B,)) - 1
+            rows = jnp.arange(B)
+            k_cache = k_cache.at[rows, ins].set(
+                k[:, 0].astype(k_cache.dtype))
+            v_cache = v_cache.at[rows, ins].set(
+                v[:, 0].astype(v_cache.dtype))
+        else:
+            # uniform lengths: one in-place dynamic_update_slice
+            ins0 = lens[0] - 1
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k.astype(k_cache.dtype), (0, ins0, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v.astype(v_cache.dtype), (0, ins0, 0, 0))
+        o = L.decode_attention(
+            q, k_cache, v_cache, scale=scale, cache_len=cache_len,
+            window=window, logit_cap=cfg.attn_logit_softcap,
+        )
+        k, v = k_cache, v_cache
+    o = L.linear(lp["wo"], o.reshape(B, S, cfg.n_heads * hd), pc, mode)
+    return o, (k, v)
+
+
+def _mlp_block(lp, cfg: ArchConfig, x, *, decode=False):
+    pc, mode = cfg.precision, cfg.quant_mode
+    if cfg.moe is not None:
+        y, aux = MOE.moe_apply(
+            lp, x, cfg.moe, ffn_kind=cfg.ffn, act=cfg.act, pc=pc, mode=mode,
+            decode=decode,
+        )
+        return y, aux
+    if cfg.spiking is not None:
+        y = L.spiking_ffn_apply(
+            lp, x, cfg.act, timesteps=cfg.spiking.timesteps,
+            leak_shift=cfg.spiking.leak_shift,
+            threshold=cfg.spiking.threshold, pc=pc, mode=mode,
+        )
+        return y, jnp.float32(0)
+    return L.ffn_apply(lp, x, cfg.ffn, cfg.act, pc, mode), jnp.float32(0)
+
+
+def _block_full(x_aux, scanned, cfg: ArchConfig, prefix_len: int):
+    """Full-sequence block (train / prefill path), scan body."""
+    x, aux = x_aux
+    lp, window = scanned
+    pc, mode = cfg.precision, cfg.quant_mode
+    h = L.apply_norm(cfg.norm, lp["ln1"], x)
+    parts = []
+    if cfg.family != "ssm":
+        a, _ = _attn_block(
+            lp["attn"], cfg, h, window=window, prefix_len=prefix_len
+        )
+        parts.append(a)
+    if "ssm" in lp:
+        s = M2.mamba2_apply(lp["ssm"], h, cfg.ssm, cfg.d_model, pc=pc,
+                            mode=mode)
+        parts.append(s)
+    if len(parts) == 2:  # hymba: learnable per-channel mix of attn & ssm
+        mix = lp["mix_scale"].astype(x.dtype)
+        a = parts[0] * mix[0][None, None] + parts[1] * mix[1][None, None]
+        a = a * 0.5
+    else:
+        a = parts[0]
+    if cfg.post_block_norms:
+        a = L.apply_norm(cfg.norm, lp["post_ln1"], a)
+    x = x + a
+    if "mlp" in lp:
+        h2 = L.apply_norm(cfg.norm, lp["ln2"], x)
+        m, aux_l = _mlp_block(lp["mlp"], cfg, h2)
+        if cfg.post_block_norms:
+            m = L.apply_norm(cfg.norm, lp["post_ln2"], m)
+        x = x + m
+        aux = aux + aux_l
+    return (x, aux), None
+
+
+def _embed_tokens(params, cfg: ArchConfig, tokens, vision_embeds=None):
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    if cfg.name.startswith(("gemma", "paligemma")):
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if cfg.vision_prefix_len and vision_embeds is not None:
+        ve = L.linear(params["vision_proj"], vision_embeds.astype(x.dtype))
+        x = jnp.concatenate([ve, x], axis=1)
+    return x
+
+
+def forward_hidden(params, cfg: ArchConfig, tokens, vision_embeds=None):
+    """tokens: (B, S_text) -> (hidden (B, S, d), aux_loss)."""
+    x = _embed_tokens(params, cfg, tokens, vision_embeds)
+    windows = jnp.asarray(window_schedule(cfg))
+    body = functools.partial(
+        _block_full, cfg=cfg, prefix_len=cfg.vision_prefix_len
+    )
+    if cfg.remat != "none":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat == "dots" else None)
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0)),
+                               (params["layers"], windows))
+    return L.apply_norm(cfg.norm, params["final_norm"], x), aux
+
+
+def _logits_chunk(params, cfg: ArchConfig, h):
+    if cfg.tie_embeddings:
+        logits = h.astype(jnp.float32) @ params["embed"].astype(jnp.float32).T
+    else:
+        logits = L.linear(params["lm_head"], h).astype(jnp.float32)
+    return L.softcap(logits, cfg.final_logit_softcap)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, ce_chunk: int = 512):
+    """Seq-chunked cross-entropy.  batch: tokens (B,S), labels (B,S) with
+    -1 = masked; VLM batches add vision_embeds."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    h, aux = forward_hidden(params, cfg, tokens,
+                            batch.get("vision_embeds"))
+    if cfg.vision_prefix_len:
+        h = h[:, cfg.vision_prefix_len:]
+    B, S, d = h.shape
+    nc = max(1, S // ce_chunk)
+    while S % nc:                 # nc must divide S (e.g. paligemma's 3840)
+        nc -= 1
+    cs = S // nc
+    hc = h.reshape(B, nc, cs, d).swapaxes(0, 1)
+    lc = labels.reshape(B, nc, cs).swapaxes(0, 1)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_loss(hb, lb):
+        # checkpointed: the (B, chunk, vocab) logits are recomputed in the
+        # backward pass instead of being saved per chunk
+        logits = _logits_chunk(params, cfg, hb)
+        mask = (lb >= 0).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.clip(lb, 0)[..., None], axis=-1
+        )[..., 0]
+        return jnp.sum((lse - tgt) * mask), jnp.sum(mask)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hb, lb = xs
+        t, c = chunk_loss(hb, lb)
+        return (tot + t, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0)), (hc, lc)
+    )
+    return tot / jnp.maximum(cnt, 1.0) + aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    dt = _dtype(cfg)
+    # per-slot lengths: the serving engine's continuous batching keeps
+    # ragged sequences in one shared pool
+    cache = {"len": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family != "ssm":
+        if cfg.kv_cache_bits != 16:
+            # sub-word packed cache: int32 words along head_dim + one f32
+            # absmax scale per (position, head) — kernels/kv_attention
+            w = cfg.head_dim * cfg.kv_cache_bits // 32
+            cache["k"] = jnp.zeros(
+                (cfg.n_layers, batch, max_len, cfg.n_kv, w), jnp.int32)
+            cache["v"] = jnp.zeros_like(cache["k"])
+            cache["k_scale"] = jnp.zeros(
+                (cfg.n_layers, batch, max_len, cfg.n_kv, 1), jnp.float32)
+            cache["v_scale"] = jnp.zeros_like(cache["k_scale"])
+        else:
+            cache["k"] = jnp.zeros(
+                (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.head_dim), dt
+            )
+            cache["v"] = jnp.zeros_like(cache["k"])
+    if cfg.family == "ssm" or cfg.hybrid_parallel_ssm:
+        s = cfg.ssm
+        din = s.d_inner(cfg.d_model)
+        gN = s.n_groups * s.d_state
+        cache["conv"] = jnp.zeros(
+            (cfg.n_layers, batch, s.conv_width - 1, din + 2 * gN), dt
+        )
+        cache["ssm"] = jnp.zeros(
+            (cfg.n_layers, batch, s.n_heads(cfg.d_model), s.head_dim,
+             s.d_state), jnp.float32,
+        )
+    return cache
+
+
+def _block_prefill(x_, scanned, cfg: ArchConfig, prefix_len: int):
+    """Like _block_full but emits per-layer K/V (and SSM states) for cache."""
+    x = x_
+    lp, window = scanned
+    pc, mode = cfg.precision, cfg.quant_mode
+    h = L.apply_norm(cfg.norm, lp["ln1"], x)
+    outs = {}
+    parts = []
+    if cfg.family != "ssm":
+        B, S, _ = h.shape
+        hd = cfg.head_dim
+        q = L.linear(lp["attn"]["wq"], h, pc, mode).reshape(
+            B, S, cfg.n_heads, hd)
+        k = L.linear(lp["attn"]["wk"], h, pc, mode).reshape(B, S, cfg.n_kv, hd)
+        v = L.linear(lp["attn"]["wv"], h, pc, mode).reshape(B, S, cfg.n_kv, hd)
+        pos = jnp.arange(S, dtype=jnp.int32)
+        q = L.rope(q, pos, cfg.rope_theta)
+        k = L.rope(k, pos, cfg.rope_theta)
+        scale = cfg.attn_scale if cfg.attn_scale is not None else hd**-0.5
+        o = L.attention(
+            q, k, v, scale=scale, causal=True, window=window,
+            prefix_len=prefix_len, logit_cap=cfg.attn_logit_softcap,
+        )
+        a = L.linear(lp["attn"]["wo"], o.reshape(B, S, cfg.n_heads * hd),
+                     pc, mode)
+        parts.append(a)
+        if cfg.kv_cache_bits != 16:
+            from repro.kernels.kv_attention import ref as KVR
+
+            outs["k"], outs["k_scale"] = KVR.quantize_kv(
+                k, cfg.kv_cache_bits)
+            outs["v"], outs["v_scale"] = KVR.quantize_kv(
+                v, cfg.kv_cache_bits)
+        else:
+            outs["k"], outs["v"] = k, v
+    if "ssm" in lp:
+        sm, st = M2.mamba2_apply(lp["ssm"], h, cfg.ssm, cfg.d_model, pc=pc,
+                                 mode=mode, return_state=True)
+        outs["conv"], outs["ssm"] = st["conv"], st["ssm"]
+        parts.append(sm)
+    if len(parts) == 2:
+        mix = lp["mix_scale"].astype(x.dtype)
+        a = (parts[0] * mix[0][None, None] + parts[1] * mix[1][None, None]) * 0.5
+    else:
+        a = parts[0]
+    if cfg.post_block_norms:
+        a = L.apply_norm(cfg.norm, lp["post_ln1"], a)
+    x = x + a
+    if "mlp" in lp:
+        h2 = L.apply_norm(cfg.norm, lp["ln2"], x)
+        m, _ = _mlp_block(lp["mlp"], cfg, h2)
+        if cfg.post_block_norms:
+            m = L.apply_norm(cfg.norm, lp["post_ln2"], m)
+        x = x + m
+    return x, outs
+
+
+def prefill(params, cfg: ArchConfig, tokens, vision_embeds=None):
+    """Returns (last-token logits (B, vocab), cache)."""
+    x = _embed_tokens(params, cfg, tokens, vision_embeds)
+    windows = jnp.asarray(window_schedule(cfg))
+    body = functools.partial(_block_prefill, cfg=cfg,
+                             prefix_len=cfg.vision_prefix_len)
+    x, outs = jax.lax.scan(body, x, (params["layers"], windows))
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = _logits_chunk(params, cfg, x[:, -1:])[:, 0]
+    cache = {"len": jnp.full((x.shape[0],), x.shape[1], jnp.int32)}
+    for key in ("k", "v", "k_scale", "v_scale", "conv", "ssm"):
+        if key in outs:
+            cache[key] = outs[key]
+    return logits, cache
+
+
+def _block_decode(carry, scanned, cfg: ArchConfig, ragged: bool = False):
+    x, cache_len = carry
+    lp, window, lcache = scanned
+    pc, mode = cfg.precision, cfg.quant_mode
+    h = L.apply_norm(cfg.norm, lp["ln1"], x)
+    new_cache = {}
+    parts = []
+    if cfg.family != "ssm":
+        if cfg.kv_cache_bits != 16:
+            ckv = (lcache["k"], lcache["k_scale"], lcache["v"],
+                   lcache["v_scale"])
+        else:
+            ckv = (lcache["k"], lcache["v"])
+        a, kv_out = _attn_block(
+            lp["attn"], cfg, h, window=window, prefix_len=0,
+            q_offset=cache_len - 1, cache_kv=ckv,
+            cache_len=cache_len, ragged=ragged,
+        )
+        if cfg.kv_cache_bits != 16:
+            (new_cache["k"], new_cache["k_scale"], new_cache["v"],
+             new_cache["v_scale"]) = kv_out
+        else:
+            new_cache["k"], new_cache["v"] = kv_out
+        parts.append(a)
+    if "ssm" in lp:
+        sm, sc = M2.mamba2_decode_step(
+            lp["ssm"], h, {"conv": lcache["conv"], "ssm": lcache["ssm"]},
+            cfg.ssm, cfg.d_model, pc=pc, mode=mode,
+        )
+        new_cache["conv"], new_cache["ssm"] = sc["conv"], sc["ssm"]
+        parts.append(sm)
+    if len(parts) == 2:
+        mix = lp["mix_scale"].astype(x.dtype)
+        a = (parts[0] * mix[0][None, None] + parts[1] * mix[1][None, None]) * 0.5
+    else:
+        a = parts[0]
+    if cfg.post_block_norms:
+        a = L.apply_norm(cfg.norm, lp["post_ln1"], a)
+    x = x + a
+    if "mlp" in lp:
+        h2 = L.apply_norm(cfg.norm, lp["ln2"], x)
+        m, _ = _mlp_block(lp["mlp"], cfg, h2, decode=True)
+        if cfg.post_block_norms:
+            m = L.apply_norm(cfg.norm, lp["post_ln2"], m)
+        x = x + m
+    return (x, cache_len), new_cache
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens, *, ragged=False):
+    """One decode step.  tokens: (B, 1).  Returns (logits (B, vocab), cache).
+
+    ragged=True enables per-slot cache lengths (continuous batching); the
+    uniform path uses a single in-place dynamic_update_slice per layer."""
+    # one-hot matmul lookup: with the embedding vocab-sharded, a plain
+    # gather makes XLA all-gather the whole table every step (190 MB/dev
+    # for olmo); the one-hot contraction moves only a (B, d) psum
+    oh = jax.nn.one_hot(tokens, cfg.vocab, dtype=_dtype(cfg))
+    x = jnp.einsum("bsv,vd->bsd", oh, params["embed"].astype(_dtype(cfg)))
+    if cfg.name.startswith(("gemma", "paligemma")):
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    windows = jnp.asarray(window_schedule(cfg))
+    new_len = cache["len"] + 1
+    lcache = {k: cache[k] for k in ("k", "v", "k_scale", "v_scale",
+                                    "conv", "ssm") if k in cache}
+    body = functools.partial(_block_decode, cfg=cfg, ragged=ragged)
+    (x, _), new_lcache = jax.lax.scan(
+        body, (x, new_len), (params["layers"], windows, lcache)
+    )
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = _logits_chunk(params, cfg, x)[:, 0]
+    out_cache = dict(cache)
+    out_cache.update(new_lcache)
+    out_cache["len"] = new_len
+    return logits, out_cache

@@ -1,0 +1,11 @@
+from repro.quant.formats import PrecisionConfig, QuantizedTensor
+from repro.quant.ptq import quantize, dequantize
+from repro.quant.qat import fake_quant
+
+__all__ = [
+    "PrecisionConfig",
+    "QuantizedTensor",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+]

@@ -1,0 +1,123 @@
+"""Quantized tensor container — the unified multi-precision datapath's type.
+
+A :class:`QuantizedTensor` is the on-HBM form of an L-SPINE operand:
+sub-word packed int32 words plus per-group scales.  One container type
+serves every precision (2/4/8-bit), mirroring the paper's single NCE
+datapath with a precision-control signal.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionConfig:
+    """The PC (precision control) word of the engine.
+
+    bits:        2, 4 or 8 (16 means "no quantization" — bf16 passthrough).
+    group_size:  contraction-dim group for scales; -1 = per-(out-)channel.
+    symmetric:   symmetric (no zero point) vs asymmetric quantization.
+    accum_dtype: integer accumulator width (int32, as on the FPGA).
+    """
+
+    bits: int = 8
+    group_size: int = -1
+    symmetric: bool = True
+    accum_dtype: str = "int32"
+    # MSE-optimal clip search (AWQ-style grid over clip fractions).  Plain
+    # absmax is hopeless at 2-bit (the ±1 code lands at ~3 sigma on Gaussian
+    # weights); the search recovers the paper's "graceful degradation".
+    clip_search: bool = True
+
+    def __post_init__(self):
+        if self.bits not in (2, 4, 8, 16):
+            raise ValueError(f"unsupported bits={self.bits}")
+        if self.bits != 16 and self.group_size != -1 and self.group_size <= 0:
+            raise ValueError(f"bad group_size={self.group_size}")
+
+    @property
+    def quantized(self) -> bool:
+        return self.bits != 16
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1))
+
+    @property
+    def simd_lanes(self) -> int:
+        """Parallel low-bit ops per 32-bit word — 16x/8x/4x for 2/4/8-bit."""
+        return packing.WORD_BITS // self.bits
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Packed low-precision tensor.
+
+    data:   int32 words, shape = shape[:-1] + (packed_last_dim,)
+            (packing is along the LAST logical axis — the contraction dim
+            for weight matrices stored (in, out) -> packed along `in` after
+            a transpose at quantization time; see ptq.quantize).
+    scale:  float32, shape = shape[:-1] + (n_groups,) broadcastable scales.
+    zero:   optional float32 zero points (asymmetric), same shape as scale.
+    shape:  logical (unpacked) shape.
+    bits:   field width.
+    group_size: contraction group (-1 = one group).
+    """
+
+    data: jnp.ndarray
+    scale: jnp.ndarray
+    zero: Optional[jnp.ndarray]
+    shape: Tuple[int, ...]
+    bits: int
+    group_size: int
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        children = (self.data, self.scale, self.zero)
+        aux = (self.shape, self.bits, self.group_size)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, scale, zero = children
+        shape, bits, group_size = aux
+        return cls(data, scale, zero, shape, bits, group_size)
+
+    # -- convenience ---------------------------------------------------------
+    @property
+    def n(self) -> int:
+        """Logical length of the packed axis."""
+        return self.shape[-1]
+
+    @property
+    def n_groups(self) -> int:
+        return 1 if self.group_size == -1 else self.n // self.group_size
+
+    def nbytes_packed(self) -> int:
+        """HBM bytes of the packed representation (data + scales)."""
+        import numpy as np
+
+        d = int(np.prod(self.data.shape)) * 4
+        s = int(np.prod(self.scale.shape)) * 4
+        z = 0 if self.zero is None else int(np.prod(self.zero.shape)) * 4
+        return d + s + z
+
+    def nbytes_dense_fp32(self) -> int:
+        import numpy as np
+
+        return int(np.prod(self.shape)) * 4
+
+    def compression_ratio(self) -> float:
+        return self.nbytes_dense_fp32() / self.nbytes_packed()

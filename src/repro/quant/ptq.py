@@ -1,0 +1,111 @@
+"""Post-training quantization to the packed L-SPINE format.
+
+Symmetric per-channel / per-group absmax quantization (the scheme the
+paper's Fig. 4/5 sweep uses for INT8/INT4/INT2), plus asymmetric min/max.
+The packed axis is the LAST axis of the logical tensor; for weight
+matrices used as ``x @ W`` with ``W: (in, out)`` we quantize the
+*transposed* ``(out, in)`` layout so that packing runs along the
+contraction dim and scales are per-output-channel.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.quant.formats import PrecisionConfig, QuantizedTensor
+
+
+def _group_reshape(x: jnp.ndarray, group_size: int) -> jnp.ndarray:
+    """(..., n) -> (..., n_groups, group_size)."""
+    n = x.shape[-1]
+    if group_size == -1:
+        return x.reshape(*x.shape[:-1], 1, n)
+    if n % group_size:
+        raise ValueError(f"n={n} not divisible by group_size={group_size}")
+    return x.reshape(*x.shape[:-1], n // group_size, group_size)
+
+
+def _mse_optimal_scale(
+    g: jnp.ndarray, absmax: jnp.ndarray, cfg: PrecisionConfig
+) -> jnp.ndarray:
+    """Per-group scale minimizing quantization MSE over a clip-fraction grid.
+
+    Sequential (lax.map) over the grid so peak memory stays ~1x the tensor.
+    """
+    fracs = jnp.linspace(0.25, 1.0, 16, dtype=jnp.float32)
+
+    def mse_for(frac):
+        scale = jnp.maximum(absmax * frac / cfg.qmax, 1e-8)
+        q = jnp.clip(jnp.round(g / scale[..., None]), cfg.qmin, cfg.qmax)
+        return jnp.mean((q * scale[..., None] - g) ** 2, axis=-1)
+
+    mses = jax.lax.map(mse_for, fracs)              # (F, ..., G)
+    best = jnp.argmin(mses, axis=0)                 # (..., G)
+    frac = fracs[best]
+    return jnp.maximum(absmax * frac / cfg.qmax, 1e-8)
+
+
+def quantize(
+    w: jnp.ndarray, cfg: PrecisionConfig
+) -> QuantizedTensor:
+    """Quantize ``w`` (float, packed along last axis) to packed form."""
+    if not cfg.quantized:
+        raise ValueError("bits=16 tensors are not packed; keep them dense")
+    w = w.astype(jnp.float32)
+    g = _group_reshape(w, cfg.group_size)
+    if cfg.symmetric:
+        absmax = jnp.max(jnp.abs(g), axis=-1)
+        if cfg.clip_search and cfg.bits <= 4:
+            scale = _mse_optimal_scale(g, absmax, cfg)
+        else:
+            scale = jnp.maximum(absmax / cfg.qmax, 1e-8)
+        zero = None
+        q = jnp.round(g / scale[..., None])
+    else:
+        lo = jnp.min(g, axis=-1)
+        hi = jnp.max(g, axis=-1)
+        scale = jnp.maximum((hi - lo) / (cfg.qmax - cfg.qmin), 1e-8)
+        zero = lo - cfg.qmin * scale
+        q = jnp.round((g - zero[..., None]) / scale[..., None])
+    q = jnp.clip(q, cfg.qmin, cfg.qmax).astype(jnp.int32)
+    q = q.reshape(w.shape)
+    data = packing.pack(q, cfg.bits)
+    return QuantizedTensor(
+        data=data,
+        scale=scale.astype(jnp.float32),
+        zero=None if zero is None else zero.astype(jnp.float32),
+        shape=tuple(w.shape),
+        bits=cfg.bits,
+        group_size=cfg.group_size,
+    )
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jnp.ndarray:
+    """Unpack + rescale back to a dense float tensor (the jnp oracle path)."""
+    q = packing.unpack(qt.data, qt.bits, qt.n).astype(jnp.float32)
+    g = _group_reshape(q, qt.group_size)
+    out = g * qt.scale[..., None]
+    if qt.zero is not None:
+        out = out + qt.zero[..., None]
+    return out.reshape(qt.shape).astype(dtype)
+
+
+def quantize_error(w: jnp.ndarray, cfg: PrecisionConfig) -> jnp.ndarray:
+    """RMS relative quantization error — used by tests/benchmarks."""
+    qt = quantize(w, cfg)
+    wq = dequantize(qt)
+    num = jnp.sqrt(jnp.mean((w - wq) ** 2))
+    den = jnp.sqrt(jnp.mean(w**2)) + 1e-12
+    return num / den
+
+
+def quantize_int(
+    w: jnp.ndarray, cfg: PrecisionConfig
+) -> tuple[jnp.ndarray, jnp.ndarray, Optional[jnp.ndarray]]:
+    """Return (int values, scale, zero) without packing — kernel test helper."""
+    qt = quantize(w, cfg)
+    return packing.unpack(qt.data, qt.bits, qt.n), qt.scale, qt.zero

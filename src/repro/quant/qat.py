@@ -1,0 +1,75 @@
+"""Quantization-aware training via straight-through estimation.
+
+The paper's evaluation flow (Fig. 3) trains with standard backprop then
+post-training-quantizes; the STBP/ADMM baselines it compares against are
+QAT methods.  We provide both: :func:`fake_quant` is the STE fake-quant
+used inside training graphs so INT2/INT4 models can recover accuracy
+(used by benchmarks/fig4), and ptq.quantize is the deployment path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.formats import PrecisionConfig
+
+
+@jax.custom_vjp
+def _ste_round(x):
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+def fake_quant(w: jnp.ndarray, cfg: PrecisionConfig) -> jnp.ndarray:
+    """Differentiable fake-quantization (symmetric absmax, per-channel/group).
+
+    Forward: quantize-dequantize.  Backward: straight-through (identity
+    inside the clip range, zero outside) — the same estimator STBP-style
+    integer SNN training uses.
+    """
+    if not cfg.quantized:
+        return w
+    n = w.shape[-1]
+    gs = n if cfg.group_size == -1 else cfg.group_size
+    if n % gs:
+        gs = n     # group doesn't divide (e.g. a 27-wide conv): per-channel
+    g = w.reshape(*w.shape[:-1], n // gs, gs)
+    absmax = jax.lax.stop_gradient(jnp.max(jnp.abs(g), axis=-1, keepdims=True))
+    scale = jnp.maximum(absmax / cfg.qmax, 1e-8)
+    q = _ste_round(jnp.clip(g / scale, cfg.qmin, cfg.qmax))
+    return (q * scale).reshape(w.shape)
+
+
+def fake_quant_tree(params, cfg: PrecisionConfig, predicate=None):
+    """Apply fake_quant to every weight matrix in a param pytree.
+
+    predicate(path, leaf) -> bool selects which leaves quantize (default:
+    float arrays with ndim >= 2 — i.e. matmul weights, not norms/biases).
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    leaves, treedef = flat
+
+    def default_pred(path, leaf):
+        return (
+            hasattr(leaf, "ndim")
+            and leaf.ndim >= 2
+            and jnp.issubdtype(leaf.dtype, jnp.floating)
+        )
+
+    pred = predicate or default_pred
+    new_leaves = [
+        fake_quant(leaf, cfg) if pred(path, leaf) else leaf
+        for path, leaf in leaves
+    ]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

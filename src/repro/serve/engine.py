@@ -1,0 +1,170 @@
+"""Batched serving engine: prefill/decode with slot-based continuous batching.
+
+A fixed pool of B slots shares one stacked KV cache.  New requests are
+prefilled one-at-a-time (their per-layer K/V written into the free slot's
+batch row); the decode loop advances ALL live slots each step (one fused
+decode_step over the batch), retiring slots on EOS/length and immediately
+refilling them from the queue — vLLM-style continuous batching reduced to
+its JAX-native core.
+
+Note on cache layout: the engine keeps one global ``len`` per cache (the
+max across slots) and per-slot start offsets; shorter slots attend only
+their own valid region via position masking in decode_attention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+from repro.models.api import get_model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: Optional[List[int]] = None
+    latency_s: float = 0.0
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    slots: int = 4
+    max_len: int = 512
+    temperature: float = 0.0         # 0 = greedy
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig):
+        if cfg.family == "audio":
+            raise NotImplementedError("engine serves decoder-only archs")
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.mb = get_model(cfg)
+        self.queue: deque = deque()
+        self.done: Dict[int, Request] = {}
+
+        B, M = ecfg.slots, ecfg.max_len
+        self.cache = transformer.init_cache(cfg, B, M)
+        self.slot_req: List[Optional[Request]] = [None] * B
+        self.slot_pos = np.zeros(B, np.int32)     # tokens generated so far
+        self.slot_len = np.zeros(B, np.int32)     # prompt+generated length
+        self.last_token = np.zeros(B, np.int32)
+
+        self._prefill1 = jax.jit(
+            lambda p, toks: self.mb.prefill(p, {"tokens": toks}))
+        # ragged: slots carry independent lengths in the shared pool
+        self._decode = jax.jit(
+            functools.partial(self.mb.decode_step, ragged=True),
+            donate_argnums=(1,))
+        self._key = jax.random.PRNGKey(ecfg.seed)
+
+    # -- request plumbing -----------------------------------------------------
+
+    def add_request(self, req: Request):
+        self.queue.append(req)
+
+    def _write_slot_cache(self, slot: int, pcache, plen: int):
+        """Insert a single-request prefill cache into the pool at `slot`."""
+        for k in ("k", "v"):
+            if k in self.cache:
+                src = pcache[k]                    # (L,1,S,K,hd)
+                dst = self.cache[k]
+                pad = dst.shape[2] - src.shape[2]
+                if pad > 0:
+                    src = jnp.pad(src, ((0, 0), (0, 0), (0, pad),
+                                        (0, 0), (0, 0)))
+                self.cache[k] = dst.at[:, slot].set(src[:, 0])
+        for k in ("conv", "ssm"):
+            if k in self.cache:
+                self.cache[k] = self.cache[k].at[:, slot].set(pcache[k][:, 0])
+        # ragged per-slot length
+        self.cache["len"] = self.cache["len"].at[slot].set(
+            jnp.asarray(plen, jnp.int32))
+
+    def _admit(self):
+        for slot in range(self.ecfg.slots):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.popleft()
+                req._t0 = time.time()
+                toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+                logits, pcache = self._prefill1(self.params, toks)
+                self._write_slot_cache(slot, pcache, len(req.prompt))
+                tok = int(self._sample(logits)[0])
+                req.output = [tok]
+                # the prefill-produced first token may itself be EOS
+                if ((req.eos_id is not None and tok == req.eos_id)
+                        or req.max_new_tokens <= 1):
+                    req.latency_s = time.time() - req._t0
+                    self.done[req.uid] = req
+                    continue
+                self.slot_req[slot] = req
+                self.slot_pos[slot] = 1
+                self.slot_len[slot] = len(req.prompt) + 1
+                self.last_token[slot] = tok
+
+    def _sample(self, logits: jnp.ndarray) -> np.ndarray:
+        if self.ecfg.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, -1))
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(jax.random.categorical(
+            sub, logits / self.ecfg.temperature))
+
+    # -- main loop -------------------------------------------------------------
+
+    def step(self) -> int:
+        """One decode step over all live slots.  Returns #live slots."""
+        live = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not live:
+            return 0
+        toks = jnp.asarray(self.last_token[:, None], jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, toks)
+        next_tok = self._sample(logits)
+        for slot in live:
+            req = self.slot_req[slot]
+            tok = int(next_tok[slot])
+            req.output.append(tok)
+            self.slot_pos[slot] += 1
+            self.slot_len[slot] += 1
+            self.last_token[slot] = tok
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if (self.slot_pos[slot] >= req.max_new_tokens or hit_eos
+                    or self.slot_len[slot] >= self.ecfg.max_len):
+                req.latency_s = time.time() - req._t0
+                self.done[req.uid] = req
+                self.slot_req[slot] = None
+        return len([r for r in self.slot_req if r is not None])
+
+    def run_until_done(self, max_steps: int = 10_000) -> dict:
+        t0 = time.time()
+        n_decode = 0
+        for _ in range(max_steps):
+            self._admit()
+            if not any(r is not None for r in self.slot_req) and not self.queue:
+                break
+            n_decode += 1
+            self.step()
+        wall = time.time() - t0
+        toks = sum(len(r.output or []) for r in self.done.values())
+        return {
+            "requests": len(self.done),
+            "generated_tokens": toks,
+            "wall_s": wall,
+            "tokens_per_s": toks / max(wall, 1e-9),
+            "decode_steps": n_decode,
+        }

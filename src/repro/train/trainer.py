@@ -1,0 +1,125 @@
+"""Training loop: sharded step, async checkpointing, watchdog, restarts.
+
+The loop is deliberately boring — all the interesting failure behaviour
+lives in distributed/{checkpoint,fault_tolerance}.py and is exercised by
+tests/test_fault_tolerance.py and examples/fault_tolerant_training.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data import synthetic
+from repro.distributed import sharding as shd
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.fault_tolerance import (
+    FailureInjector,
+    StepWatchdog,
+    WatchdogConfig,
+)
+from repro.launch import specs as S
+from repro.launch.steps import make_train_step
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    batch: int = 8
+    seq: int = 128
+    seed: int = 0
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 25
+    ckpt_keep: int = 3
+    log_every: int = 10
+    async_ckpt: bool = True
+    opt: opt.OptConfig = opt.OptConfig(warmup_steps=10, total_steps=1000)
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tcfg: TrainConfig, mesh=None,
+                 injector: Optional[FailureInjector] = None,
+                 log: Callable[[str], None] = print):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.injector = injector
+        self.log = log
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
+        self.watchdog = StepWatchdog(WatchdogConfig())
+        self.history: list = []
+
+        self._step_fn = make_train_step(cfg, tcfg.opt)
+        if mesh is not None:
+            params_struct = S.param_specs_struct(cfg)
+            pspecs = shd.param_specs(params_struct, mesh)
+            self._pshard = shd.to_shardings(pspecs, mesh)
+            self._step_fn = jax.jit(
+                self._step_fn, donate_argnums=(0, 1))
+        else:
+            self._step_fn = jax.jit(self._step_fn, donate_argnums=(0, 1))
+
+    # -- state --------------------------------------------------------------
+
+    def init_state(self, seed: int = 0):
+        from repro.models.api import get_model
+
+        mb = get_model(self.cfg)
+        params = mb.init(jax.random.PRNGKey(seed))
+        opt_state = opt.init(params)
+        return params, opt_state, 0
+
+    def restore_or_init(self):
+        latest = self.ckpt.latest_step()
+        params, opt_state, step = self.init_state(self.tcfg.seed)
+        if latest is not None:
+            state = self.ckpt.restore(
+                latest, {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            step = latest
+            self.log(f"[trainer] restored checkpoint step={latest}")
+        return params, opt_state, step
+
+    # -- loop ---------------------------------------------------------------
+
+    def run(self) -> dict:
+        params, opt_state, start = self.restore_or_init()
+        it = synthetic.lm_iterator(
+            self.cfg.vocab, self.tcfg.batch, self.tcfg.seq,
+            seed=self.tcfg.seed, start_step=start,
+        )
+        losses = []
+        for step in range(start, self.tcfg.steps):
+            batch = next(it)
+            if self.injector is not None:
+                self.injector.check(step)
+            t0 = time.time()
+            batch = jax.tree.map(lambda x: jax.numpy.asarray(x), batch)
+            params, opt_state, metrics = self._step_fn(
+                params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            verdict = self.watchdog.observe(step, dt)
+            losses.append(loss)
+            self.history.append({"step": step, "loss": loss, "dt": dt,
+                                 "verdict": verdict})
+            if step % self.tcfg.log_every == 0:
+                self.log(f"[trainer] step={step} loss={loss:.4f} "
+                         f"dt={dt*1e3:.0f}ms lr={float(metrics['lr']):.2e}")
+            if (step + 1) % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(step + 1,
+                               {"params": params, "opt": opt_state},
+                               blocking=not self.tcfg.async_ckpt)
+        self.ckpt.wait()
+        self.ckpt.save(self.tcfg.steps, {"params": params, "opt": opt_state})
+        return {"final_loss": float(np.mean(losses[-5:])),
+                "first_loss": losses[0] if losses else float("nan"),
+                "losses": losses,
+                "stragglers": self.watchdog.straggler_steps}

@@ -1,0 +1,159 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle.
+
+Every kernel must match its ref.py bit-for-bit (integer kernels) or to
+fp32 tolerance (dequant matmul) across shapes, precisions and group sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+from repro.kernels import (
+    lif_step_ops,
+    packed_qmatmul_ops,
+    spike_matmul_ops,
+    use_backend,
+)
+from repro.kernels.lif_step import ref as lif_ref
+from repro.kernels.packed_qmatmul import ref as q_ref
+from repro.kernels.spike_matmul import ref as s_ref
+from repro.quant import PrecisionConfig, quantize
+
+
+# ---------------------------------------------------------------------------
+# packed_qmatmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("group", [-1, 32, 256])
+@pytest.mark.parametrize("m,k,n", [(16, 64, 32), (33, 256, 96),
+                                   (128, 128, 128), (1, 512, 64)])
+def test_qmatmul_interpret_vs_ref(bits, group, m, k, n):
+    if group != -1 and k % group:
+        pytest.skip("group must divide k")
+    kx, kw = jax.random.split(jax.random.PRNGKey(bits * m + k + n))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (n, k), jnp.float32)
+    qt = quantize(w, PrecisionConfig(bits=bits, group_size=group))
+    y_ref = q_ref.qmatmul_ref(x, qt)
+    with use_backend("interpret"):
+        y_k = packed_qmatmul_ops.qmatmul(x, qt)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_k),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qmatmul_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 128)).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 128), jnp.float32)
+    qt = quantize(w, PrecisionConfig(bits=4))
+    y_ref = q_ref.qmatmul_ref(x, qt)
+    with use_backend("interpret"):
+        y_k = packed_qmatmul_ops.qmatmul(x, qt)
+    assert y_k.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(y_ref, np.float32), np.asarray(y_k, np.float32),
+        rtol=2e-2, atol=2e-2)
+
+
+def test_qmatmul_batched_leading_dims():
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 96), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(3), (24, 96), jnp.float32)
+    qt = quantize(w, PrecisionConfig(bits=8))
+    y_ref = q_ref.qmatmul_ref(x, qt)
+    with use_backend("interpret"):
+        y_k = packed_qmatmul_ops.qmatmul(x, qt)
+    assert y_k.shape == (2, 3, 24)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_k),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# spike_matmul (integer-exact)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("m,k,n", [(4, 100, 40), (17, 200, 50),
+                                   (128, 128, 128), (1, 33, 7)])
+def test_spike_matmul_bit_exact(bits, m, k, n):
+    key = jax.random.PRNGKey(bits + m + k)
+    sp = (jax.random.uniform(key, (m, k)) < 0.3).astype(jnp.int32)
+    spp = packing.pack_bool(sp)
+    w = jax.random.normal(jax.random.PRNGKey(7), (n, k))
+    qt = quantize(w, PrecisionConfig(bits=bits))
+    i_ref = s_ref.spike_matmul_ref(spp, qt, d_in=k)
+    with use_backend("interpret"):
+        i_k = spike_matmul_ops.spike_matmul(spp, qt, d_in=k)
+    np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_k))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), rate=st.floats(0.0, 1.0))
+def test_spike_matmul_density_property(seed, rate):
+    """i_syn equals the sum of weight columns at active spike positions."""
+    key = jax.random.PRNGKey(seed)
+    sp = (jax.random.uniform(key, (3, 64)) < rate).astype(jnp.int32)
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (8, 64))
+    qt = quantize(w, PrecisionConfig(bits=8))
+    i = s_ref.spike_matmul_ref(packing.pack_bool(sp), qt, d_in=64)
+    wq = packing.unpack(qt.data, qt.bits, 64)
+    expected = np.asarray(sp) @ np.asarray(wq).T
+    np.testing.assert_array_equal(np.asarray(i), expected)
+
+
+# ---------------------------------------------------------------------------
+# lif_step (integer-exact)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("soft", [True, False])
+@pytest.mark.parametrize("shape", [(4, 128), (3, 300), (1, 512), (16, 1024)])
+def test_lif_step_bit_exact(soft, shape):
+    kv, ki = jax.random.split(jax.random.PRNGKey(shape[1]))
+    v = jax.random.randint(kv, shape, -300, 300, jnp.int32)
+    i = jax.random.randint(ki, shape, -100, 150, jnp.int32)
+    v1, s1 = lif_ref.lif_step_ref(v, i, leak_shift=3, threshold_q=64,
+                                  soft_reset=soft)
+    with use_backend("interpret"):
+        v2, s2 = lif_step_ops.lif_step(v, i, leak_shift=3, threshold_q=64,
+                                       soft_reset=soft)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    k=st.integers(1, 7),
+    theta=st.integers(1, 500),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lif_invariants(k, theta, seed):
+    """Soft reset: post-spike membrane < threshold; shift-leak contracts."""
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.randint(key, (2, 64), -1000, 1000, jnp.int32)
+    i = jnp.zeros((2, 64), jnp.int32)
+    v1, s = lif_ref.lif_step_ref(v, i, leak_shift=k, threshold_q=theta)
+    v1 = np.asarray(v1)
+    s = np.asarray(s)
+    # 1. every spiking neuron had v >= theta pre-reset
+    np.testing.assert_array_equal(s, (v1 + s * theta >= theta).astype(int))
+    # 2. leak contracts positive potentials toward zero (no input)
+    v_pos = np.asarray(v) > 0
+    leaked = v1 + s * theta  # pre-reset value
+    assert (leaked[v_pos] <= np.asarray(v)[v_pos]).all()
+
+
+def test_lif_rollout_rate_decreases_with_threshold():
+    from repro.core.lif import lif_rollout_int
+
+    i_syn = jax.random.randint(jax.random.PRNGKey(0), (16, 4, 128), 0, 50,
+                               jnp.int32)
+    rates = []
+    for theta in (32, 128, 512):
+        _, s = lif_rollout_int(jnp.zeros((4, 128), jnp.int32), i_syn,
+                               leak_shift=3, threshold_q=theta)
+        rates.append(float(jnp.mean(s.astype(jnp.float32))))
+    assert rates[0] >= rates[1] >= rates[2]
+    assert rates[0] > 0

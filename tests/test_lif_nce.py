@@ -1,0 +1,77 @@
+"""NCE integration: integer pipeline vs float twin, SIMD throughput model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoding, packing
+from repro.core.lif import LIFConfig, lif_rollout_float, lif_rollout_int
+from repro.core.nce import NCEConfig, NeuronComputeEngine, throughput_model
+from repro.quant import PrecisionConfig
+
+
+def test_float_twin_matches_integer_dynamics():
+    """lif_step_float forward == lif_step_int when run on integer-valued
+    inputs scaled into float (beta = 1 - 2^-k exactly representable)."""
+    k, theta = 3, 64
+    v0 = jnp.zeros((2, 32), jnp.int32)
+    i_t = jax.random.randint(jax.random.PRNGKey(0), (5, 2, 32), 0, 40,
+                             jnp.int32)
+    vi, si = lif_rollout_int(v0, i_t, leak_shift=k, threshold_q=theta)
+    cfg = LIFConfig(leak_shift=k, threshold=float(theta))
+    vf, sf = lif_rollout_float(v0.astype(jnp.float32),
+                               i_t.astype(jnp.float32), cfg)
+    # integer leak is floor-division so trajectories can differ by < 1 per
+    # step; spike trains agree except at exact-boundary cases
+    agree = float(jnp.mean((si == sf.astype(jnp.int32)).astype(jnp.float32)))
+    assert agree > 0.95
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_nce_rollout_precisions(bits):
+    eng = NeuronComputeEngine.from_float(
+        NCEConfig(precision=PrecisionConfig(bits=bits), threshold_q=8),
+        jax.random.normal(jax.random.PRNGKey(1), (96, 40)),
+    )
+    sp = (jax.random.uniform(jax.random.PRNGKey(2), (4, 6, 96)) < 0.3)
+    spp = encoding.pack_spike_train(sp.astype(jnp.int8))
+    v, outs = eng.rollout(spp)
+    assert v.shape == (6, 40)
+    rate = float(encoding.unpack_spike_train(outs, 40).mean())
+    assert 0.0 <= rate <= 1.0
+    assert np.isfinite(np.asarray(v)).all()
+
+
+def test_simd_throughput_scaling():
+    """The paper's 16x/4x/1x claim: INT2 runs 4x more lanes than INT8."""
+    n_macs = 10_000
+    t = {b: throughput_model(
+        NCEConfig(precision=PrecisionConfig(bits=b)), n_macs)
+        for b in (2, 4, 8)}
+    assert t[2]["simd_lanes"] == 16
+    assert t[4]["simd_lanes"] == 8
+    assert t[8]["simd_lanes"] == 4
+    assert t[2]["latency_ns"] < t[4]["latency_ns"] < t[8]["latency_ns"]
+    # energy improves with precision reduction (activity scaling)
+    assert t[2]["energy_nj"] < t[8]["energy_nj"]
+
+
+def test_spike_encoding_rates():
+    x = jnp.linspace(0, 1, 100)
+    s = encoding.rate_encode(jax.random.PRNGKey(0), x, timesteps=400)
+    rates = np.asarray(encoding.spike_rate(s))
+    np.testing.assert_allclose(rates, np.asarray(x), atol=0.12)
+    # latency encode: exactly one spike per neuron
+    lat = encoding.latency_encode(x, timesteps=8)
+    np.testing.assert_array_equal(
+        np.asarray(lat.sum(axis=0)), np.ones((100,)))
+
+
+def test_spike_train_packing_roundtrip():
+    sp = (jax.random.uniform(jax.random.PRNGKey(3), (7, 3, 70)) < 0.5)
+    packed = encoding.pack_spike_train(sp.astype(jnp.int8))
+    assert packed.shape == (7, 3, 3)  # ceil(70/32)
+    unpacked = encoding.unpack_spike_train(packed, 70)
+    np.testing.assert_array_equal(np.asarray(unpacked),
+                                  np.asarray(sp, np.int8))

@@ -1,0 +1,168 @@
+"""Per-arch smoke tests: reduced configs, one fwd/train step, shape+NaN."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.api import get_model
+from repro.quant.formats import PrecisionConfig
+
+B, S = 2, 64
+
+
+def make_batch(cfg, key):
+    if cfg.family == "audio":
+        return {
+            "frames": jax.random.normal(key, (B, S, cfg.d_model)),
+            "tokens": jnp.zeros((B, S), jnp.int32),
+            "labels": jnp.ones((B, S), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        St = S - cfg.vision_prefix_len
+        return {
+            "tokens": jnp.zeros((B, St), jnp.int32),
+            "vision_embeds": jax.random.normal(
+                key, (B, cfg.vision_prefix_len, cfg.d_model)),
+            "labels": jnp.ones((B, St), jnp.int32),
+        }
+    return {"tokens": jnp.zeros((B, S), jnp.int32),
+            "labels": jnp.ones((B, S), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    mb = get_model(cfg)
+    params = mb.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    loss, grads = jax.value_and_grad(lambda p: mb.loss_fn(p, batch))(params)
+    assert np.isfinite(float(loss))
+    gnorm = jax.tree_util.tree_reduce(
+        lambda a, g: a + float(jnp.sum(jnp.square(g.astype(jnp.float32)))),
+        grads, 0.0)
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_config(arch, smoke=True)
+    mb = get_model(cfg)
+    params = mb.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    batch.pop("labels")
+    logits, cache = mb.prefill(params, batch)
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    if "k" in cache:  # room for new tokens
+        pad = [(0, 0), (0, 0), (0, 4), (0, 0), (0, 0)]
+        cache["k"] = jnp.pad(cache["k"], pad)
+        cache["v"] = jnp.pad(cache["v"], pad)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for _ in range(3):
+        logits, cache = mb.decode_step(params, cache, tok)
+        assert logits.shape == (B, cfg.vocab)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "granite-moe-3b-a800m",
+                                  "mamba2-1.3b"])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_smoke_quantized_datapath(arch, bits):
+    """The L-SPINE multi-precision feature on LM archs (QAT fake-quant)."""
+    cfg = dataclasses.replace(
+        get_config(arch, smoke=True),
+        precision=PrecisionConfig(bits=bits, group_size=-1))
+    mb = get_model(cfg)
+    params = mb.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    loss = mb.loss_fn(params, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_decode_matches_prefill_continuation():
+    """Teacher-forced prefill over t+1 tokens == prefill(t) + decode(1)."""
+    cfg = get_config("olmo-1b", smoke=True)
+    mb = get_model(cfg)
+    params = mb.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, 16), 0, cfg.vocab)
+    # full prefill over 16 tokens
+    logits_full, _ = mb.prefill(params, {"tokens": toks})
+    # prefill 15 + decode token 16
+    logits15, cache = mb.prefill(params, {"tokens": toks[:, :15]})
+    cache["k"] = jnp.pad(cache["k"], [(0, 0), (0, 0), (0, 4), (0, 0), (0, 0)])
+    cache["v"] = jnp.pad(cache["v"], [(0, 0), (0, 0), (0, 4), (0, 0), (0, 0)])
+    logits_step, _ = mb.decode_step(params, cache, toks[:, 15:16])
+    np.testing.assert_allclose(
+        np.asarray(logits_full, np.float32),
+        np.asarray(logits_step, np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_mamba2_decode_matches_full_forward():
+    """SSD chunked scan and the O(1) recurrent step agree step-by-step."""
+    cfg = get_config("mamba2-1.3b", smoke=True)
+    mb = get_model(cfg)
+    params = mb.init(jax.random.PRNGKey(0))
+    T = 12
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, T), 0, cfg.vocab)
+    logits_full, _ = mb.prefill(params, {"tokens": toks})
+    logits_pre, cache = mb.prefill(params, {"tokens": toks[:, :T - 1]})
+    logits_step, _ = mb.decode_step(params, cache, toks[:, T - 1:T])
+    np.testing.assert_allclose(
+        np.asarray(logits_full, np.float32),
+        np.asarray(logits_step, np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_gemma2_softcap_active():
+    cfg = get_config("gemma2-2b", smoke=True)
+    mb = get_model(cfg)
+    params = mb.init(jax.random.PRNGKey(0))
+    logits, _ = mb.prefill(params, {"tokens": jnp.zeros((1, 8), jnp.int32)})
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.final_logit_softcap + 1e-3
+
+
+def test_sliding_window_masks_long_range():
+    """A local-attention layer must ignore keys beyond the window."""
+    from repro.models import layers as L
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 32, 4, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 4, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 32, 4, 16))
+    o_win = L.attention(q, k, v, scale=0.25, causal=True, window=4)
+    # perturb keys/values far outside the window of the last query
+    k2 = k.at[:, :8].set(100.0)
+    v2 = v.at[:, :8].set(-100.0)
+    o_win2 = L.attention(q, k2, v2, scale=0.25, causal=True, window=4)
+    np.testing.assert_allclose(np.asarray(o_win[:, -1]),
+                               np.asarray(o_win2[:, -1]), atol=1e-5)
+
+
+def test_chunked_attention_matches_dense():
+    from repro.models import layers as L
+
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 96, 8, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 96, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 96, 2, 16))
+    dense = L.attention(q, k, v, scale=0.25, causal=True, chunked=False)
+    chunk = L.attention(q, k, v, scale=0.25, causal=True, chunked=True,
+                        q_chunk=32, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(dense, np.float32),
+                               np.asarray(chunk, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_dispatch_matches_dense_mix_when_capacity_ample():
+    from repro.configs.base import MoEConfig
+    from repro.models import moe as MOE
+
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff_expert=32,
+                    capacity_factor=4.0)
+    p = MOE.moe_init(jax.random.PRNGKey(0), 16, cfg, "glu", jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+    y_d, _ = MOE.moe_apply_dispatch(p, x, cfg, ffn_kind="glu", act="silu")
+    y_m, _ = MOE.moe_apply_dense(p, x, cfg, ffn_kind="glu", act="silu")
+    np.testing.assert_allclose(np.asarray(y_d), np.asarray(y_m),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,73 @@
+"""Quantization: error bounds, monotonicity with bits, STE behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import PrecisionConfig, dequantize, fake_quant, quantize
+from repro.quant.ptq import quantize_error
+
+
+@pytest.mark.parametrize("bits,max_err", [(8, 0.02), (4, 0.15), (2, 0.5)])
+@pytest.mark.parametrize("group", [-1, 32])
+def test_quant_error_bounds(bits, max_err, group):
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+    err = float(quantize_error(w, PrecisionConfig(bits=bits,
+                                                  group_size=group)))
+    assert err < max_err, (bits, group, err)
+
+
+def test_error_monotone_in_bits():
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 64))
+    errs = [float(quantize_error(w, PrecisionConfig(bits=b)))
+            for b in (2, 4, 8)]
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_grouped_beats_per_channel_at_low_bits():
+    # finer scale granularity must not hurt (paper Fig.4 memory/acc tradeoff)
+    w = jax.random.normal(jax.random.PRNGKey(2), (16, 256)) * (
+        1 + 10 * jax.nn.one_hot(3, 256)[None])  # an outlier column
+    e_pc = float(quantize_error(w, PrecisionConfig(bits=4, group_size=-1)))
+    e_g = float(quantize_error(w, PrecisionConfig(bits=4, group_size=32)))
+    assert e_g <= e_pc * 1.05
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 1000))
+def test_packed_roundtrip_consistency(bits, seed):
+    # fixed-point property of plain absmax quantization (clip_search can
+    # legitimately choose a different clip on requantized values)
+    pc = PrecisionConfig(bits=bits, clip_search=False)
+    w = jax.random.normal(jax.random.PRNGKey(seed), (8, 64))
+    qt = quantize(w, pc)
+    w2 = dequantize(qt)
+    qt2 = quantize(w2, pc)
+    w3 = dequantize(qt2)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w3),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_memory_footprint_ratio():
+    w = jax.random.normal(jax.random.PRNGKey(3), (256, 1024))
+    r8 = quantize(w, PrecisionConfig(bits=8)).compression_ratio()
+    r4 = quantize(w, PrecisionConfig(bits=4)).compression_ratio()
+    r2 = quantize(w, PrecisionConfig(bits=2)).compression_ratio()
+    assert 3.5 < r8 < 4.1 and 7 < r4 < 8.2 and 14 < r2 < 16.4
+
+
+def test_ste_gradient_passthrough():
+    w = jnp.linspace(-1, 1, 64).reshape(1, 64)
+    pc = PrecisionConfig(bits=4)
+    g = jax.grad(lambda x: jnp.sum(fake_quant(x, pc) * 3.0))(w)
+    # inside the clip range the STE gradient is the upstream gradient
+    inner = np.asarray(g)[0, 5:-5]
+    np.testing.assert_allclose(inner, 3.0, rtol=1e-5)
+
+
+def test_fake_quant_noop_at_16_bits():
+    w = jax.random.normal(jax.random.PRNGKey(4), (4, 8))
+    out = fake_quant(w, PrecisionConfig(bits=16))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(w))

@@ -1,0 +1,74 @@
+"""Serving engine: continuous batching correctness and throughput stats."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.api import get_model
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("olmo-1b", smoke=True)
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_completes_all_requests(served):
+    cfg, params = served
+    eng = ServeEngine(cfg, params, EngineConfig(slots=3, max_len=128))
+    rng = np.random.default_rng(0)
+    for uid in range(7):
+        eng.add_request(Request(
+            uid=uid, prompt=rng.integers(0, cfg.vocab, 6).astype(np.int32),
+            max_new_tokens=5))
+    stats = eng.run_until_done()
+    assert stats["requests"] == 7
+    assert stats["generated_tokens"] == 7 * 5
+    assert all(len(r.output) == 5 for r in eng.done.values())
+
+
+def test_engine_greedy_matches_sequential_decode(served):
+    """Batched continuous decoding must equal one-request-at-a-time greedy
+    decoding (slot isolation: ragged lengths never leak across slots)."""
+    cfg, params = served
+    mb = get_model(cfg)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(3, 10))
+                            ).astype(np.int32) for _ in range(3)]
+
+    # reference: each request alone in a 1-slot engine
+    ref_outputs = []
+    for i, p in enumerate(prompts):
+        eng1 = ServeEngine(cfg, params, EngineConfig(slots=1, max_len=64))
+        eng1.add_request(Request(uid=0, prompt=p, max_new_tokens=4))
+        eng1.run_until_done()
+        ref_outputs.append(eng1.done[0].output)
+
+    # batched with 3 slots (ragged prompt lengths share the pool)
+    eng = ServeEngine(cfg, params, EngineConfig(slots=3, max_len=64))
+    for i, p in enumerate(prompts):
+        eng.add_request(Request(uid=i, prompt=p, max_new_tokens=4))
+    eng.run_until_done()
+    for i in range(3):
+        assert eng.done[i].output == ref_outputs[i], i
+
+
+def test_engine_eos_stops(served):
+    cfg, params = served
+    eng = ServeEngine(cfg, params, EngineConfig(slots=1, max_len=64))
+    # find the greedy first token, then use it as EOS: generation stops at 1
+    eng.add_request(Request(uid=0, prompt=np.array([1, 2, 3], np.int32),
+                            max_new_tokens=8))
+    eng.run_until_done()
+    first = eng.done[0].output[0]
+
+    eng2 = ServeEngine(cfg, params, EngineConfig(slots=1, max_len=64))
+    eng2.add_request(Request(uid=1, prompt=np.array([1, 2, 3], np.int32),
+                             max_new_tokens=8, eos_id=first))
+    eng2.run_until_done()
+    assert eng2.done[1].output[0] == first
+    assert len(eng2.done[1].output) == 1

@@ -1,0 +1,94 @@
+"""Coverage for the launch-spec and sharding-rule layer: every supported
+(arch x shape) cell must produce well-formed input specs and divisible
+partition specs — the static half of what the dry-run proves."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, supported_shapes
+from repro.distributed import sharding as shd
+from repro.launch import specs as S
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # rule checks only need axis SIZES; build an abstract 16x16 mesh
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divisible(arch, mesh):
+    cfg = get_config(arch)
+    params = S.param_specs_struct(cfg)
+    specs = shd.param_specs(params, mesh)
+
+    def check(leaf, spec):
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                continue
+            size = mesh.shape[ax] if isinstance(ax, str) else int(
+                np.prod([mesh.shape[a] for a in ax]))
+            assert dim % size == 0, (leaf.shape, spec)
+
+    jax.tree.map(check, params, specs,
+                 is_leaf=lambda x: hasattr(x, "shape"))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_all_cells(arch, mesh):
+    """input_specs exist and are shape-consistent for every supported cell."""
+    cfg = get_config(arch)
+    for shp_name in supported_shapes(arch):
+        shape = SHAPES[shp_name]
+        specs = S.input_specs(cfg, shape)
+        if shape.kind == "train":
+            assert specs["batch"]["tokens"].shape[0] == shape.global_batch
+            assert specs["batch"]["labels"].dtype == jnp.int32
+        elif shape.kind == "prefill":
+            assert "labels" not in specs["batch"]
+        else:
+            assert specs["tokens"].shape == (shape.global_batch, 1)
+            cache = specs["cache"]
+            assert "len" in cache
+            # cache specs must be shardable under the cache rules
+            cs = shd.cache_specs(cache, mesh)
+            for k, v in cache.items():
+                for dim, ax in zip(v.shape, cs[k]):
+                    if ax is None:
+                        continue
+                    size = mesh.shape[ax] if isinstance(ax, str) else int(
+                        np.prod([mesh.shape[a] for a in ax]))
+                    assert dim % size == 0, (k, v.shape, cs[k])
+
+
+def test_serve_variant_strips_fsdp(mesh):
+    cfg = get_config("olmo-1b")
+    params = S.param_specs_struct(cfg)
+    base = shd.param_specs(params, mesh)
+    shd.set_variant("serve")
+    try:
+        serve = shd.param_specs(params, mesh)
+    finally:
+        shd.set_variant("train")
+    base_axes = {ax for s in jax.tree.leaves(
+        base, is_leaf=lambda x: hasattr(x, "index")) for ax in s if ax}
+    serve_axes = {ax for s in jax.tree.leaves(
+        serve, is_leaf=lambda x: hasattr(x, "index")) for ax in s if ax}
+    assert "data" in base_axes
+    assert "data" not in serve_axes     # no FSDP on the serve path
+    assert "model" in serve_axes        # TP retained
+
+
+def test_window_schedule_patterns():
+    from repro.models.transformer import window_schedule
+
+    g2 = get_config("gemma2-2b")
+    w = window_schedule(g2)
+    assert w[0] == g2.sliding_window and w[1] == 0  # alternating
+    hy = get_config("hymba-1.5b")
+    wh = window_schedule(hy)
+    assert wh[0] == 0 and wh[15] == 0 and wh[31] == 0
+    assert wh[1] == hy.sliding_window
