@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from benchmarks.bench_lib import emit, time_call
 from repro.core import packing
+from repro.core.nce import NCEConfig, NeuronComputeEngine
 from repro.kernels import lif_step_ops, packed_qmatmul_ops, spike_matmul_ops
 from repro.kernels import use_backend
 from repro.quant import PrecisionConfig, quantize
@@ -66,10 +67,56 @@ def run(quick: bool = False):
     emit("kernel/lif_step_fused", us,
          f"bytes={fused_bytes};v5e_mem_us={fused_bytes/HBM_BW*1e6:.1f}")
 
+    # fused vs unfused T-step NCE rollout (the fused_nce kernel's win).
+    # On the CPU jnp backend both paths run the same per-timestep math
+    # (rollout dispatches to the bit-exact reference scan), so the host
+    # timings are a schedule-parity check, NOT a fusion speedup — the
+    # fusion claim is the derived v5e HBM-traffic ratio: the unfused
+    # chain re-reads the packed weights and round-trips int32 currents,
+    # membrane and unpacked spikes through HBM every timestep, the fused
+    # kernel touches HBM once per packed operand.
+    t_steps, b_roll = (4, 32) if quick else (8, 64)
+    for bits in (8, 2):
+        eng = NeuronComputeEngine.from_float(
+            NCEConfig(precision=PrecisionConfig(bits=bits), threshold_q=64),
+            jax.random.normal(jax.random.PRNGKey(4), (k, n), jnp.float32))
+        sp_t = (jax.random.uniform(jax.random.PRNGKey(5),
+                                   (t_steps, b_roll, k)) < 0.2)
+        spp_t = packing.pack_bool(sp_t.astype(jnp.int32))
+        f_fused = jax.jit(eng.rollout)
+        f_unfused = jax.jit(eng.rollout_unfused)
+        us_fused = time_call(f_fused, spp_t)
+        us_unfused = time_call(f_unfused, spp_t)
+        w_bytes = n * k * bits // 8
+        sp_in = t_steps * b_roll * k // 8
+        sp_out = t_steps * b_roll * n // 8
+        fused_bytes = w_bytes + sp_in + sp_out + b_roll * n * 4
+        # per step: weights + spike block reads; i_syn write+read; v
+        # read+write; int spike write+read for the pack; packed out write
+        unfused_bytes = t_steps * (
+            w_bytes + b_roll * k // 8 + b_roll * n * (4 + 4 + 4 + 4 + 4 + 4)
+            + b_roll * n // 8)
+        emit(f"kernel/nce_rollout_unfused_w{bits}", us_unfused,
+             f"T={t_steps};hbm_bytes={unfused_bytes}")
+        emit(f"kernel/nce_rollout_fused_w{bits}", us_fused,
+             f"T={t_steps};hbm_bytes={fused_bytes};"
+             f"v5e_traffic_ratio={unfused_bytes/fused_bytes:.1f}x;"
+             f"host_timing_is_parity_check=1")
+        print(f"  fused NCE rollout w{bits}: host parity "
+              f"{us_unfused/us_fused:.2f}x (same math on jnp backend), "
+              f"v5e HBM traffic /{unfused_bytes/fused_bytes:.1f}")
+
     # interpret-mode Pallas correctness spot check at bench shapes
     with use_backend("interpret"):
         small_x = x[:64, :256]
         qt_small = quantize(w[:128, :256],
                             PrecisionConfig(bits=4, group_size=-1))
         _ = packed_qmatmul_ops.qmatmul(small_x, qt_small)
+        eng_small = NeuronComputeEngine.from_float(
+            NCEConfig(precision=PrecisionConfig(bits=4), threshold_q=64),
+            jax.random.normal(jax.random.PRNGKey(6), (256, 128)))
+        sp_small = packing.pack_bool(
+            (jax.random.uniform(jax.random.PRNGKey(7), (4, 8, 256)) < 0.2
+             ).astype(jnp.int32))
+        _ = eng_small.rollout(sp_small)
     print("  pallas interpret spot-check at bench shapes: OK")

@@ -7,10 +7,11 @@ This is the software twin of L-SPINE's NCE (Fig. 2): per timestep,
     AC unit:   i_syn = spikes @ W_q              (multiplier-less: binary x int)
     LIF:       v -= v>>k; v += i_syn; s = v>=theta; reset
 
-All arithmetic is int32, matching the RTL.  The hot ops route through the
-Pallas kernels (spike_matmul, lif_step) when the backend is 'pallas' /
-'interpret'; the 'jnp' backend uses the bit-identical reference path —
-selected in repro.kernels.backend.
+All arithmetic is int32, matching the RTL.  Single steps route through
+the spike_matmul + lif_step Pallas kernels; the T-step ``rollout`` runs
+the fused_nce kernel — one pallas_call for the whole rollout, membrane
+resident in VMEM, spikes packed in-kernel.  The 'jnp' backend uses the
+bit-identical reference path — selected in repro.kernels.backend.
 """
 
 from __future__ import annotations
@@ -99,7 +100,31 @@ class NeuronComputeEngine:
     def rollout(
         self, spikes_packed_t: jnp.ndarray
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Scan T timesteps of packed input spikes (T, B, words_in)."""
+        """All T timesteps of packed input spikes (T, B, words_in), fused.
+
+        Routes through the fused NCE kernel (kernels/fused_nce): one
+        ``pallas_call`` runs unpack + accumulate + LIF + spike re-pack
+        for the entire rollout with the membrane tile resident in VMEM —
+        no per-timestep HBM round trips of currents, membrane or
+        unpacked spikes.  Bit-exact with scanning :meth:`step`.
+        """
+        from repro.kernels import fused_nce_ops
+
+        return fused_nce_ops.fused_nce_rollout(
+            spikes_packed_t,
+            self.weights,
+            d_in=self.d_in,
+            leak_shift=self.cfg.leak_shift,
+            threshold_q=self.cfg.threshold_q,
+            soft_reset=self.cfg.soft_reset,
+        )
+
+    def rollout_unfused(
+        self, spikes_packed_t: jnp.ndarray
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Pre-fusion rollout: scan :meth:`step` (accumulate -> lif_step ->
+        pack_bool per timestep).  Kept as the fusion baseline for
+        benchmarks/kernel_bench.py and equivalence tests."""
         b = spikes_packed_t.shape[1]
         v0 = jnp.zeros((b, self.d_out), jnp.int32)
 

@@ -3,7 +3,9 @@
 Each layer computes synaptic currents with a (optionally fake-quantized)
 linear/conv op and applies LIF dynamics over T timesteps.  Training uses
 the float/surrogate twin; deployment uses the integer path through the
-NCE (core/nce.py) with packed weights.
+NCE (core/nce.py) with packed weights — ``spiking_dense_int_apply``
+runs the whole T-step layer through the fused NCE rollout kernel
+(kernels/fused_nce), the deployment twin of ``spiking_dense_apply``.
 
 Layout convention: time axis first — activations are (T, B, ...).
 """
@@ -15,6 +17,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
 from repro.core.lif import LIFConfig, lif_rollout_float
 from repro.quant.formats import PrecisionConfig
 from repro.quant.qat import fake_quant
@@ -54,6 +57,51 @@ def spiking_dense_apply(
     v0 = jnp.zeros(i_syn_t.shape[1:], i_syn_t.dtype)
     _, s_t = lif_rollout_float(v0, i_syn_t, lif)
     return s_t
+
+
+def spiking_dense_int_apply(
+    params,
+    spikes_t: jnp.ndarray,      # (T, B, d_in) — {0,1} binary spikes
+    lif: LIFConfig,
+    pc: PrecisionConfig,
+    threshold_q: Optional[int] = None,
+):
+    """Integer deployment twin of :func:`spiking_dense_apply`.
+
+    Quantizes ``params['w']`` to the packed NCE format and runs all T
+    timesteps through the fused NCE rollout kernel: spikes are bit-packed
+    once on entry, the membrane stays on-chip for the whole scan, and the
+    layer's output spikes come back as 1-bit words.  The float threshold
+    is folded into the integer domain (theta_q ~ theta / mean weight
+    scale) exactly as core/nce.py folds scaling out of the datapath.
+
+    Returns (T, B, d_out) {0,1} int32 spikes.
+    """
+    from repro.core.nce import NCEConfig, NeuronComputeEngine
+    from repro.quant.ptq import quantize
+
+    w = params["w"]                       # (d_in, d_out) float
+    qt = quantize(w.T, pc)                # packed (d_out, d_in)
+    if threshold_q is None:
+        # the kernel's integer threshold is a static parameter, so the
+        # fold needs a concrete scale — auto-folding only works outside
+        # jit; traced callers must pass threshold_q explicitly
+        try:
+            scale = float(jnp.mean(qt.scale))
+        except jax.errors.ConcretizationTypeError as e:
+            raise ValueError(
+                "spiking_dense_int_apply: threshold_q must be passed "
+                "explicitly under jit — the integer threshold fold needs "
+                "a concrete weight scale") from e
+        threshold_q = max(1, int(round(lif.threshold / max(scale, 1e-12))))
+    eng = NeuronComputeEngine(
+        NCEConfig(precision=pc, leak_shift=lif.leak_shift,
+                  threshold_q=threshold_q, soft_reset=lif.soft_reset),
+        qt,
+    )
+    packed_in = packing.pack_bool(spikes_t.astype(jnp.int32))
+    _, packed_out = eng.rollout(packed_in)
+    return packing.unpack_bool(packed_out, eng.d_out)
 
 
 # ---------------------------------------------------------------------------

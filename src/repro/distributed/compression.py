@@ -36,7 +36,9 @@ def ef_int8_allreduce_mean(
     Returns (mean_gradient fp32, new_err).
     Requires numel % axis_size == 0 (caller pads).
     """
-    n = jax.lax.axis_size(axis_name)
+    # psum of the literal 1 folds to a static int (jax.lax.axis_size is
+    # not available on every supported jax version)
+    n = jax.lax.psum(1, axis_name)
     shape = g.shape
     x = g.astype(jnp.float32) + err.astype(jnp.float32)
 
@@ -65,7 +67,7 @@ def tree_ef_allreduce_mean(grads, errs, axis_name: str):
 
     def one(g, e):
         nonlocal n_ax
-        n = jax.lax.axis_size(axis_name)
+        n = jax.lax.psum(1, axis_name)
         numel = 1
         for s in g.shape:
             numel *= s

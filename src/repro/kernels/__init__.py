@@ -1,14 +1,34 @@
 """Pallas TPU kernels for L-SPINE's compute hot-spots.
 
-Three kernels, each with <name>/kernel.py (pl.pallas_call + BlockSpec),
+Four kernels, each with <name>/kernel.py (pl.pallas_call + BlockSpec),
 ops.py (backend-dispatched public API) and ref.py (pure-jnp oracle):
 
   packed_qmatmul — SIMD multi-precision packed-weight matmul (the datapath)
   lif_step       — fused shift-add LIF membrane update (the neuron)
   spike_matmul   — bit-packed spike x quantized weight accumulate (the AC unit)
+  fused_nce      — all T timesteps of one NCE layer in a single pallas_call:
+                   in-kernel unpack (1/2/4/8-bit), MXU binary x int
+                   accumulate, VMEM-resident int32 membrane across the
+                   whole T-step scan, in-kernel 1-bit spike re-pack.
+                   Supersedes the per-timestep spike_matmul + lif_step +
+                   pack_bool chain on the deployment rollout path.
+
+Backend dispatch (every ops.py follows the same three-way rule, selected
+by repro.kernels.backend):
+
+  'pallas'    — compiled Pallas kernel; the real TPU target.
+  'interpret' — the same kernel under interpret=True; used for CPU
+                correctness runs and the bit-exactness test matrix.
+  'jnp'       — the ref.py oracle; identical integer math and packed
+                storage, used for full-model CPU smoke tests.
+
+Integer kernels (spike_matmul, lif_step, fused_nce) must match their
+ref.py bit-for-bit on every backend; padding inserted by ops.py must
+never change the visible bits.
 """
 
 from repro.kernels.backend import get_backend, set_backend, use_backend
+from repro.kernels.fused_nce import ops as fused_nce_ops
 from repro.kernels.lif_step import ops as lif_step_ops
 from repro.kernels.packed_qmatmul import ops as packed_qmatmul_ops
 from repro.kernels.spike_matmul import ops as spike_matmul_ops
@@ -17,6 +37,7 @@ __all__ = [
     "get_backend",
     "set_backend",
     "use_backend",
+    "fused_nce_ops",
     "lif_step_ops",
     "packed_qmatmul_ops",
     "spike_matmul_ops",

@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: fused multi-precision NCE rollout.
+
+The paper's headline datapath in one ``pallas_call``: all T timesteps of
+one layer's spike-gated accumulate + shift-add LIF update run without any
+intermediate HBM traffic.  Dataflow per (batch, neuron) tile:
+
+    grid (M/bm, N/bn, T), T innermost
+    t-th step:
+      packed spikes  (1, bm, k/32)  --VPU shift/mask--> (bm, k) binary
+      packed weights (bn, k*bits/32) --VPU shift/mask--> (bn, k) INTb codes
+      MXU:  i_syn = s @ Wq^T          int8 x int8 -> int32
+      VPU:  v -= v>>leak; v += i_syn; spike = v>=theta; reset
+      VPU:  spike tile re-packed to 1-bit words, written to HBM
+
+The int32 membrane tile lives in a VMEM scratch buffer for the whole
+T-step scan (TPU scratch persists across grid steps; T is the innermost
+grid dim so each (i, j) tile sees t = 0..T-1 consecutively).  Per
+timestep the only HBM traffic is the packed input-spike block (1
+bit/event) and the packed output-spike block — the unfused chain
+(`spike_matmul` -> `lif_step` -> `pack_bool`) moves the int32 current
+and membrane tensors through HBM at every step instead.
+
+Weights stay resident per (i, j) tile across all T steps (index map
+constant in t), so the packed weight block is fetched once per tile, not
+once per timestep.
+
+Padding contract (enforced by ops.py): m % bm == 0, n % bn == 0,
+bn % 32 == 0, and the packed k words of spikes/weights describe the same
+padded k (multiple of 128).  Zero-padded spike words contribute nothing
+to the accumulate, and the `n_out` mask zeroes spikes from padded output
+neurons so the packed words match ``packing.pack_bool`` bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import packing
+
+
+def _fused_nce_kernel(s_ref, w_ref, v_ref, o_ref, v_acc,
+                      *, bits: int, leak_shift: int, threshold_q: int,
+                      v_reset_q: int, soft_reset: bool, n_out: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        v_acc[...] = jnp.zeros_like(v_acc)
+
+    # unpack this timestep's spike block and the (t-resident) weight
+    # block; packing.unpack is pure shift/mask jnp, so the shared helper
+    # traces inside the kernel and the bit layout can never diverge from
+    # the ref.py oracle's
+    s_words = s_ref[0]
+    w_words = w_ref[...]
+    s = packing.unpack(s_words, 1, s_words.shape[-1] * 32).astype(jnp.int8)
+    vpw_w = packing.WORD_BITS // bits
+    w = packing.unpack(w_words, bits,
+                       w_words.shape[-1] * vpw_w).astype(jnp.int8)
+    # binary x int accumulate on the MXU (multiplier-less in spirit: the
+    # left operand is {0,1}, every PE multiply is a masked pass-through)
+    i_syn = jax.lax.dot_general(
+        s, w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    # shift-add LIF update on the VMEM-resident membrane tile
+    v = v_acc[...]
+    v = v - (v >> leak_shift) + i_syn
+    spikes = (v >= threshold_q).astype(jnp.int32)
+    # zero spikes of zero-padded output neurons so packed words are
+    # bit-identical to pack_bool of the unpadded reference
+    col = pl.program_id(1) * v.shape[1] + jax.lax.broadcasted_iota(
+        jnp.int32, v.shape, 1)
+    spikes = jnp.where(col < n_out, spikes, 0)
+    if soft_reset:
+        v = v - spikes * threshold_q
+    else:
+        v = jnp.where(spikes == 1, jnp.int32(v_reset_q), v)
+
+    v_acc[...] = v
+    v_ref[...] = v          # index map constant in t: written back once
+    o_ref[0] = packing.pack_bool(spikes)  # bn % 32 == 0: no pad inserted
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "n_out", "leak_shift", "threshold_q",
+                     "v_reset_q", "soft_reset", "bm", "bn", "interpret"),
+)
+def fused_nce_rollout_pallas(
+    spikes_packed_t: jnp.ndarray,  # (T, m, k/32) int32
+    w_packed: jnp.ndarray,         # (n, k*bits/32) int32
+    *,
+    bits: int,
+    n_out: int,                    # true d_out (<= n); masks padded neurons
+    leak_shift: int,
+    threshold_q: int,
+    v_reset_q: int = 0,
+    soft_reset: bool = True,
+    bm: int = 8,
+    bn: int = 128,
+    interpret: bool = False,
+):
+    t_steps, m, win = spikes_packed_t.shape
+    n = w_packed.shape[0]
+    vpw_w = packing.WORD_BITS // bits
+    k = win * 32
+    if w_packed.shape[1] * vpw_w != k:
+        raise ValueError(
+            f"packed k mismatch: spikes describe k={k}, weights "
+            f"{w_packed.shape[1] * vpw_w} (caller ops.py must pad both)")
+    if bn % 32:
+        raise ValueError(f"bn={bn} must be a multiple of 32 (spike word)")
+    if m % bm or n % bn:
+        raise ValueError("caller (ops.py) must pad to tile multiples")
+    grid = (m // bm, n // bn, t_steps)
+    kernel = functools.partial(
+        _fused_nce_kernel,
+        bits=bits, leak_shift=leak_shift, threshold_q=threshold_q,
+        v_reset_q=v_reset_q, soft_reset=soft_reset, n_out=n_out,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, win), lambda i, j, t: (t, i, 0)),
+            pl.BlockSpec((bn, w_packed.shape[1]), lambda i, j, t: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+            pl.BlockSpec((1, bm, bn // 32), lambda i, j, t: (t, i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.int32),
+            jax.ShapeDtypeStruct((t_steps, m, n // 32), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(spikes_packed_t, w_packed)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the fused NCE rollout.
+
+Bit-exact composition of the three unfused stages the fused kernel
+replaces, per timestep:
+
+    i_syn[t] = spike_matmul_ref(spikes_packed[t], Wq)     (AC unit)
+    v, s[t]  = lif_step_int(v, i_syn[t])                  (LIF update)
+    out[t]   = pack_bool(s[t])                            (spike re-pack)
+
+The fused kernel (kernel.py) must reproduce this exactly — int32
+arithmetic, floor-shift leak, soft/hard reset, and the 1-bit word layout
+of :func:`repro.core.packing.pack_bool` — for bits in {2, 4, 8}.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.lif import lif_step_int
+from repro.kernels.spike_matmul.ref import spike_matmul_ref
+from repro.quant.formats import QuantizedTensor
+
+
+def fused_nce_rollout_ref(
+    spikes_packed_t: jnp.ndarray,  # (T, B, ceil(d_in/32)) int32, 1-bit fields
+    qt: QuantizedTensor,           # packed (d_out, d_in) integer codes
+    *,
+    d_in: int,
+    leak_shift: int,
+    threshold_q: int,
+    v_reset_q: int = 0,
+    soft_reset: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """T-step integer NCE rollout.
+
+    Returns (v_T: (B, d_out) int32,
+             out_spikes_packed: (T, B, ceil(d_out/32)) int32).
+    """
+    b = spikes_packed_t.shape[1]
+    d_out = qt.shape[0]
+    v0 = jnp.zeros((b, d_out), jnp.int32)
+
+    def step(v, sp):
+        i_syn = spike_matmul_ref(sp, qt, d_in=d_in)
+        v, s = lif_step_int(
+            v,
+            i_syn,
+            leak_shift=leak_shift,
+            threshold_q=threshold_q,
+            v_reset_q=v_reset_q,
+            soft_reset=soft_reset,
+        )
+        return v, packing.pack_bool(s)
+
+    return jax.lax.scan(step, v0, spikes_packed_t)

@@ -20,6 +20,22 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_abstract_mesh(shape, axes):
+    """Device-free mesh for static sharding-rule checks (axis sizes only).
+
+    Papers over the AbstractMesh constructor change: jax <= 0.4.x takes a
+    single ``((name, size), ...)`` pair tuple, newer jax takes
+    ``(sizes, names)`` like ``jax.make_mesh``.  Callers always pass
+    ``(sizes, names)``.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:  # jax <= 0.4.x pair-tuple signature
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def make_host_mesh(model_parallel: int = 1):
     """Tiny mesh over the real local devices (CPU tests, laptop runs)."""
     n = len(jax.devices())

@@ -1,0 +1,86 @@
+"""Optional-import shim for ``hypothesis``.
+
+The property-based tests import ``given`` / ``settings`` / ``strategies``
+from here instead of from ``hypothesis`` directly.  When hypothesis is
+installed (see requirements-dev.txt) the real library is re-exported and
+the tests run with full shrinking/edge-case generation.  When it is not,
+a minimal stand-in runs each property as a deterministic seeded-random
+example sweep, so the suite collects and runs everywhere.
+
+Fallback semantics (intentionally tiny):
+  * strategies.integers/floats/sampled_from/booleans draw from a
+    ``random.Random`` seeded per-test (crc32 of the test's qualname), so
+    failures reproduce across runs;
+  * the first example pins every strategy to its minimum/first element,
+    covering the lower boundary hypothesis would probe;
+  * ``settings(max_examples=N)`` keeps its meaning; every other keyword
+    (deadline, ...) is accepted and ignored.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw_fn, min_fn):
+            self._draw = draw_fn
+            self._min = min_fn
+
+        def draw(self, rng, first: bool):
+            return self._min() if first else self._draw(rng)
+
+    class strategies:  # noqa: N801 — mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value),
+                             lambda: min_value)
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value),
+                             lambda: min_value)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements),
+                             lambda: elements[0])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5, lambda: False)
+
+    def settings(max_examples: int = 20, **_kwargs):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategy_kwargs):
+        def deco(fn):
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples", 20))
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = random.Random(seed)
+                for i in range(n):
+                    drawn = {k: s.draw(rng, first=(i == 0))
+                             for k, s in strategy_kwargs.items()}
+                    fn(*args, **drawn, **kwargs)
+            # NOT functools.wraps: copying __wrapped__ would expose the
+            # drawn parameters to pytest's signature introspection, which
+            # would then look for fixtures named after them.
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = fn.__qualname__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+        return deco

@@ -1,0 +1,187 @@
+"""Bit-exactness matrix for the fused NCE rollout kernel.
+
+The fused kernel (interpret mode) must reproduce, bit for bit, the
+unfused composition it replaces — `lif_rollout_int` over reference
+spike-matmul currents, with outputs packed by `pack_bool` — across
+precisions, reset modes, rollout lengths, and non-tile-multiple shapes
+that exercise the batch/neuron/contraction padding edges.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core import packing
+from repro.core.lif import lif_rollout_int
+from repro.kernels import fused_nce_ops, use_backend
+from repro.kernels.fused_nce import ref as fused_ref
+from repro.kernels.spike_matmul import ref as s_ref
+from repro.quant import PrecisionConfig, quantize
+
+
+def _unfused_oracle(spp, qt, *, d_in, leak_shift, threshold_q, v_reset_q,
+                    soft_reset):
+    """lif_rollout_int composed with the spike-matmul reference."""
+    i_syn_t = jax.vmap(
+        lambda sp: s_ref.spike_matmul_ref(sp, qt, d_in=d_in))(spp)
+    b = spp.shape[1]
+    v0 = jnp.zeros((b, qt.shape[0]), jnp.int32)
+    v, s_t = lif_rollout_int(
+        v0, i_syn_t, leak_shift=leak_shift, threshold_q=threshold_q,
+        v_reset_q=v_reset_q, soft_reset=soft_reset)
+    return v, packing.pack_bool(s_t)
+
+
+def _rollout_case(bits, soft, t_steps, b, d_in, d_out, *, threshold_q=8,
+                  leak_shift=3, v_reset_q=0, rate=0.3, seed=0):
+    key = jax.random.PRNGKey(seed + bits * 1000 + t_steps * 7 + d_in)
+    sp = (jax.random.uniform(key, (t_steps, b, d_in)) < rate).astype(
+        jnp.int32)
+    spp = packing.pack_bool(sp)
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (d_out, d_in))
+    qt = quantize(w, PrecisionConfig(bits=bits))
+
+    v_o, s_o = _unfused_oracle(
+        spp, qt, d_in=d_in, leak_shift=leak_shift, threshold_q=threshold_q,
+        v_reset_q=v_reset_q, soft_reset=soft)
+    with use_backend("interpret"):
+        v_k, s_k = fused_nce_ops.fused_nce_rollout(
+            spp, qt, d_in=d_in, leak_shift=leak_shift,
+            threshold_q=threshold_q, v_reset_q=v_reset_q, soft_reset=soft)
+    np.testing.assert_array_equal(np.asarray(v_o), np.asarray(v_k))
+    np.testing.assert_array_equal(np.asarray(s_o), np.asarray(s_k))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("soft", [True, False])
+@pytest.mark.parametrize("t_steps", [1, 4, 8])
+def test_fused_matches_unfused_matrix(bits, soft, t_steps):
+    _rollout_case(bits, soft, t_steps, b=3, d_in=96, d_out=40)
+
+
+@pytest.mark.parametrize("b,d_in,d_out", [
+    (1, 33, 7),       # sub-word everything
+    (5, 100, 129),    # d_out just over one 128-neuron tile
+    (9, 127, 32),     # batch over the bm=8 tile, k one short of a word pad
+    (2, 256, 64),     # k exactly two aligned blocks
+])
+def test_fused_padding_edges(b, d_in, d_out):
+    _rollout_case(4, True, 4, b=b, d_in=d_in, d_out=d_out)
+
+
+def test_fused_hard_reset_nonzero_v_reset():
+    _rollout_case(8, False, 6, b=2, d_in=64, d_out=48, v_reset_q=-3)
+
+
+def test_fused_ref_matches_oracle_composition():
+    """ref.py itself is the same composition (guards the jnp backend)."""
+    sp = (jax.random.uniform(jax.random.PRNGKey(0), (5, 4, 80)) < 0.4)
+    spp = packing.pack_bool(sp.astype(jnp.int32))
+    qt = quantize(jax.random.normal(jax.random.PRNGKey(1), (24, 80)),
+                  PrecisionConfig(bits=2))
+    v_o, s_o = _unfused_oracle(
+        spp, qt, d_in=80, leak_shift=2, threshold_q=16, v_reset_q=0,
+        soft_reset=True)
+    v_r, s_r = fused_ref.fused_nce_rollout_ref(
+        spp, qt, d_in=80, leak_shift=2, threshold_q=16, soft_reset=True)
+    np.testing.assert_array_equal(np.asarray(v_o), np.asarray(v_r))
+    np.testing.assert_array_equal(np.asarray(s_o), np.asarray(s_r))
+
+
+def test_fused_matches_engine_unfused_scan():
+    """NeuronComputeEngine.rollout (fused) == rollout_unfused (step scan)."""
+    from repro.core.nce import NCEConfig, NeuronComputeEngine
+
+    eng = NeuronComputeEngine.from_float(
+        NCEConfig(precision=PrecisionConfig(bits=4), threshold_q=8),
+        jax.random.normal(jax.random.PRNGKey(2), (96, 40)))
+    sp = (jax.random.uniform(jax.random.PRNGKey(3), (6, 3, 96)) < 0.3)
+    spp = packing.pack_bool(sp.astype(jnp.int32))
+    v_f, s_f = eng.rollout(spp)
+    v_u, s_u = eng.rollout_unfused(spp)
+    np.testing.assert_array_equal(np.asarray(v_f), np.asarray(v_u))
+    np.testing.assert_array_equal(np.asarray(s_f), np.asarray(s_u))
+
+
+def test_spiking_dense_int_apply_matches_engine():
+    """The layer wrapper == manual engine composition, eagerly."""
+    from repro.core.nce import NCEConfig, NeuronComputeEngine
+    from repro.core.snn_layers import dense_init, spiking_dense_int_apply
+
+    lif_kw = dict(leak_shift=3, soft_reset=True)
+    from repro.core.lif import LIFConfig
+    lif = LIFConfig(**lif_kw)
+    pc = PrecisionConfig(bits=4)
+    params = dense_init(jax.random.PRNGKey(0), 96, 40)
+    sp = (jax.random.uniform(jax.random.PRNGKey(1), (5, 3, 96)) < 0.3)
+
+    out = spiking_dense_int_apply(params, sp, lif, pc, threshold_q=16)
+    assert out.shape == (5, 3, 40)
+    eng = NeuronComputeEngine(
+        NCEConfig(precision=pc, threshold_q=16, **lif_kw),
+        quantize(params["w"].T, pc))
+    _, packed = eng.rollout(packing.pack_bool(sp.astype(jnp.int32)))
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(packing.unpack_bool(packed, 40)))
+
+
+def test_spiking_dense_int_apply_jit_contract():
+    """Explicit threshold_q works under jit; the auto-fold raises the
+    documented error instead of a raw ConcretizationTypeError."""
+    from repro.core.lif import LIFConfig
+    from repro.core.snn_layers import dense_init, spiking_dense_int_apply
+
+    params = dense_init(jax.random.PRNGKey(2), 64, 32)
+    sp = (jax.random.uniform(jax.random.PRNGKey(3), (2, 2, 64)) < 0.3)
+    lif, pc = LIFConfig(), PrecisionConfig(bits=4)
+
+    out = jax.jit(lambda p, s: spiking_dense_int_apply(
+        p, s, lif, pc, threshold_q=16))(params, sp)
+    assert out.shape == (2, 2, 32)
+    with pytest.raises(ValueError, match="threshold_q must be passed"):
+        jax.jit(lambda p, s: spiking_dense_int_apply(
+            p, s, lif, pc))(params, sp)
+    # eager auto-fold still works
+    out2 = spiking_dense_int_apply(params, sp, lif, pc)
+    assert out2.shape == (2, 2, 32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    t_steps=st.integers(1, 6),
+    d_in=st.integers(1, 150),
+    d_out=st.integers(1, 150),
+    theta=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_rollout_roundtrip_property(bits, t_steps, d_in, d_out, theta,
+                                          seed):
+    """pack -> fused rollout (interpret) -> unpack round trip: output
+    spikes unpack to the exact spike train of the integer oracle, and the
+    packed words carry no stray bits beyond d_out."""
+    key = jax.random.PRNGKey(seed % (2**31 - 1))
+    sp = (jax.random.uniform(key, (t_steps, 2, max(d_in, 1))) < 0.5).astype(
+        jnp.int32)
+    spp = packing.pack_bool(sp)
+    qt = quantize(jax.random.normal(jax.random.PRNGKey(seed % 97),
+                                    (d_out, d_in)),
+                  PrecisionConfig(bits=bits))
+    v_o, s_o = _unfused_oracle(
+        spp, qt, d_in=d_in, leak_shift=3, threshold_q=theta, v_reset_q=0,
+        soft_reset=True)
+    with use_backend("interpret"):
+        v_k, s_k = fused_nce_ops.fused_nce_rollout(
+            spp, qt, d_in=d_in, leak_shift=3, threshold_q=theta)
+    np.testing.assert_array_equal(np.asarray(s_o), np.asarray(s_k))
+    np.testing.assert_array_equal(np.asarray(v_o), np.asarray(v_k))
+    # unpacked trains agree with unpacking the oracle words, and repacking
+    # the unpacked kernel train reproduces the kernel words exactly (no
+    # garbage bits in the padding fields of the last word)
+    u_k = packing.unpack_bool(s_k, d_out)
+    np.testing.assert_array_equal(
+        np.asarray(u_k), np.asarray(packing.unpack_bool(s_o, d_out)))
+    np.testing.assert_array_equal(
+        np.asarray(packing.pack_bool(u_k)), np.asarray(s_k))

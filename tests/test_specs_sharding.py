@@ -15,8 +15,8 @@ from repro.launch import specs as S
 @pytest.fixture(scope="module")
 def mesh():
     # rule checks only need axis SIZES; build an abstract 16x16 mesh
-    from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    from repro.launch.mesh import make_abstract_mesh
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
