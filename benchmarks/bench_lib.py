@@ -1,11 +1,21 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing + CSV emission + JSON registry.
+
+Every :func:`emit` line is also recorded in an in-process registry so a
+suite can dump its results machine-readable with :func:`write_json` —
+one ``BENCH_<suite>.json`` per suite, the artifact the perf trajectory
+is tracked with across PRs.
+"""
 
 from __future__ import annotations
 
+import json
+import platform
 import time
-from typing import Callable
+from typing import Callable, Dict, List
 
 import jax
+
+_RECORDS: List[Dict] = []
 
 
 def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -23,5 +33,57 @@ def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
+def _parse_derived(derived: str) -> Dict:
+    """'k=v;k2=v2' -> dict with numeric values parsed where possible."""
+    out: Dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            if part:
+                out[part] = True
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v.rstrip("x"))
+            except ValueError:
+                out[k] = v
+    return out
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    _RECORDS.append({
+        "name": name,
+        "us_per_call": round(us_per_call, 1),
+        "derived": _parse_derived(derived),
+    })
+
+
+def write_json(suite: str, path: str | None = None) -> str:
+    """Dump every record emitted so far to ``BENCH_<suite>.json``.
+
+    The file lands next to the benchmarks package by default so it can be
+    committed and diffed across PRs.  Returns the path written.
+    """
+    import os
+
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__),
+                            f"BENCH_{suite}.json")
+    doc = {
+        "suite": suite,
+        "backend": jax.default_backend(),
+        "device": platform.machine(),
+        "records": list(_RECORDS),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"  wrote {path} ({len(_RECORDS)} records)")
+    return path
+
+
+def reset_records() -> None:
+    _RECORDS.clear()

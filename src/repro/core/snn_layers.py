@@ -23,6 +23,21 @@ from repro.quant.formats import PrecisionConfig
 from repro.quant.qat import fake_quant
 
 
+def _fold_threshold_q(scale, lif: LIFConfig, fn_name: str) -> int:
+    """Fold the float threshold into the integer domain through the mean
+    weight scale (theta_q ~ theta / scale).  The kernels take theta_q as
+    a static parameter, so the fold needs a concrete scale — auto-folding
+    only works outside jit; traced callers pass threshold_q explicitly."""
+    try:
+        s = float(jnp.mean(scale))
+    except jax.errors.ConcretizationTypeError as e:
+        raise ValueError(
+            f"{fn_name}: threshold_q must be passed explicitly under jit "
+            "— the integer threshold fold needs a concrete weight scale"
+        ) from e
+    return max(1, int(round(lif.threshold / max(s, 1e-12))))
+
+
 def _maybe_fq(w: jnp.ndarray, pc: Optional[PrecisionConfig]) -> jnp.ndarray:
     if pc is not None and pc.quantized:
         # weights are (in, out) / conv OIHW-flattened; fake-quant groups run
@@ -68,12 +83,14 @@ def spiking_dense_int_apply(
 ):
     """Integer deployment twin of :func:`spiking_dense_apply`.
 
-    Quantizes ``params['w']`` to the packed NCE format and runs all T
-    timesteps through the fused NCE rollout kernel: spikes are bit-packed
-    once on entry, the membrane stays on-chip for the whole scan, and the
-    layer's output spikes come back as 1-bit words.  The float threshold
-    is folded into the integer domain (theta_q ~ theta / mean weight
-    scale) exactly as core/nce.py folds scaling out of the datapath.
+    Quantizes ``params['w']`` (with the calibrated threshold-balancing
+    gain ``g`` folded in, when present) to the packed NCE format and runs
+    all T timesteps through the fused NCE rollout kernel: spikes are
+    bit-packed once on entry, the membrane stays on-chip for the whole
+    scan, and the layer's output spikes come back as 1-bit words.  The
+    float threshold is folded into the integer domain (theta_q ~ theta /
+    mean weight scale) exactly as core/nce.py folds scaling out of the
+    datapath.
 
     Returns (T, B, d_out) {0,1} int32 spikes.
     """
@@ -81,19 +98,12 @@ def spiking_dense_int_apply(
     from repro.quant.ptq import quantize
 
     w = params["w"]                       # (d_in, d_out) float
+    if "g" in params:  # fold the calibrated threshold-balancing gain
+        w = w * params["g"]
     qt = quantize(w.T, pc)                # packed (d_out, d_in)
     if threshold_q is None:
-        # the kernel's integer threshold is a static parameter, so the
-        # fold needs a concrete scale — auto-folding only works outside
-        # jit; traced callers must pass threshold_q explicitly
-        try:
-            scale = float(jnp.mean(qt.scale))
-        except jax.errors.ConcretizationTypeError as e:
-            raise ValueError(
-                "spiking_dense_int_apply: threshold_q must be passed "
-                "explicitly under jit — the integer threshold fold needs "
-                "a concrete weight scale") from e
-        threshold_q = max(1, int(round(lif.threshold / max(scale, 1e-12))))
+        threshold_q = _fold_threshold_q(qt.scale, lif,
+                                        "spiking_dense_int_apply")
     eng = NeuronComputeEngine(
         NCEConfig(precision=pc, leak_shift=lif.leak_shift,
                   threshold_q=threshold_q, soft_reset=lif.soft_reset),
@@ -147,6 +157,54 @@ def spiking_conv_apply(
     return s_t
 
 
+def spiking_conv_int_apply(
+    params,
+    spikes_t: jnp.ndarray,      # (T, B, H, W, C) — {0,1} binary spikes
+    lif: LIFConfig,
+    pc: PrecisionConfig,
+    stride: int = 1,
+    threshold_q: Optional[int] = None,
+    qct=None,
+):
+    """Integer deployment twin of :func:`spiking_conv_apply`.
+
+    Quantizes ``params['w']`` (HWIO, with the calibrated gain ``g``
+    folded in when present) to the packed im2col conv format and runs all
+    T timesteps through the fused conv rollout kernel
+    (kernels/fused_conv): spike planes are bit-packed along the channel
+    axis once on entry, the membrane stays on-chip for the whole scan,
+    and the output spikes come back as 1-bit channel words.  The float
+    threshold folds into the integer domain through the mean per-channel
+    weight scale, exactly like the dense twin.
+
+    Quantization (incl. the 2/4-bit MSE clip search) reruns on every
+    call when quantizing from float params; latency-sensitive callers
+    should quantize once at deployment time and pass the packed ``qct``
+    (with ``threshold_q``) instead — ``params`` is then ignored.
+
+    Returns (T, B, Ho, Wo, c_out) {0,1} int32 spikes (SAME padding, as
+    the float path's ``_conv2d``).
+    """
+    from repro.kernels import fused_conv_ops
+    from repro.quant.ptq import quantize_conv
+
+    if qct is None:
+        w = params["w"]                   # (kh, kw, c_in, c_out) float
+        if "g" in params:  # fold the calibrated threshold-balancing gain
+            w = w * params["g"]
+        qct = quantize_conv(w, pc)
+    if threshold_q is None:
+        threshold_q = _fold_threshold_q(qct.scale, lif,
+                                        "spiking_conv_int_apply")
+    packed_in = packing.pack_bool(spikes_t.astype(jnp.int32))
+    _, packed_out = fused_conv_ops.fused_conv_rollout(
+        packed_in, qct, stride=stride, padding="SAME",
+        leak_shift=lif.leak_shift, threshold_q=threshold_q,
+        soft_reset=lif.soft_reset,
+    )
+    return packing.unpack_bool(packed_out, qct.c_out)
+
+
 def avgpool_t(spikes_t: jnp.ndarray, window: int = 2) -> jnp.ndarray:
     """Average pooling applied per timestep (keeps spike statistics)."""
 
@@ -161,6 +219,24 @@ def avgpool_t(spikes_t: jnp.ndarray, window: int = 2) -> jnp.ndarray:
         ) / (window * window)
 
     return jax.vmap(pool)(spikes_t.astype(jnp.float32))
+
+
+def maxpool_t(spikes_t: jnp.ndarray, window: int = 2) -> jnp.ndarray:
+    """Max pooling per timestep — the binary-preserving pool the integer
+    deployment path uses (an OR over the window for {0,1} spikes, so the
+    pooled plane stays 1-bit packable; training keeps :func:`avgpool_t`)."""
+
+    def pool(x):
+        return jax.lax.reduce_window(
+            x,
+            jnp.array(0, x.dtype),
+            jax.lax.max,
+            (1, window, window, 1),
+            (1, window, window, 1),
+            "VALID",
+        )
+
+    return jax.vmap(pool)(spikes_t)
 
 
 def readout_apply(params, spikes_t: jnp.ndarray) -> jnp.ndarray:

@@ -1,7 +1,8 @@
 """Pallas TPU kernels for L-SPINE's compute hot-spots.
 
-Four kernels, each with <name>/kernel.py (pl.pallas_call + BlockSpec),
-ops.py (backend-dispatched public API) and ref.py (pure-jnp oracle):
+Five kernel families, each with <name>/kernel.py (pl.pallas_call +
+BlockSpec), ops.py (backend-dispatched public API) and ref.py (pure-jnp
+oracle) — see README.md in this directory for the family contract:
 
   packed_qmatmul — SIMD multi-precision packed-weight matmul (the datapath)
   lif_step       — fused shift-add LIF membrane update (the neuron)
@@ -12,6 +13,11 @@ ops.py (backend-dispatched public API) and ref.py (pure-jnp oracle):
                    whole T-step scan, in-kernel 1-bit spike re-pack.
                    Supersedes the per-timestep spike_matmul + lif_step +
                    pack_bool chain on the deployment rollout path.
+  fused_conv     — the same fused rollout for spiking conv layers: in-kernel
+                   im2col gather of 1-bit packed spike planes, packed-weight
+                   unpack, MXU binary x int accumulate, VMEM-resident
+                   membrane, 1-bit channel-axis spike re-pack.  Extends the
+                   low-precision datapath to the CNN benchmark models.
 
 Backend dispatch (every ops.py follows the same three-way rule, selected
 by repro.kernels.backend):
@@ -28,6 +34,7 @@ never change the visible bits.
 """
 
 from repro.kernels.backend import get_backend, set_backend, use_backend
+from repro.kernels.fused_conv import ops as fused_conv_ops
 from repro.kernels.fused_nce import ops as fused_nce_ops
 from repro.kernels.lif_step import ops as lif_step_ops
 from repro.kernels.packed_qmatmul import ops as packed_qmatmul_ops
@@ -37,6 +44,7 @@ __all__ = [
     "get_backend",
     "set_backend",
     "use_backend",
+    "fused_conv_ops",
     "fused_nce_ops",
     "lif_step_ops",
     "packed_qmatmul_ops",

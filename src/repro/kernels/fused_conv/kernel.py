@@ -1,0 +1,201 @@
+"""Pallas TPU kernel: fused packed-conv spiking rollout.
+
+The fused_nce design extended to convolutions: all T timesteps of one
+spiking conv layer run in a single ``pallas_call`` with no intermediate
+HBM traffic.  Dataflow per (batch, c_out-tile) pair:
+
+    grid (B, N/bn, T), T innermost
+    t-th step:
+      packed spike plane (1, 1, Hp, Wp*wc) --VPU shift/mask--> (Hp, Wp, Cp)
+      im2col gather: kh*kw strided slices -> patches (Ho*Wo, kh*kw*Cp)
+      packed weights (bn, K*bits/32)      --VPU shift/mask--> (bn, K) INTb
+      MXU:  i_syn = patches @ Wq^T        int8 x int8 -> int32
+      VPU:  v -= v>>leak; v += i_syn; spike = v>=theta; reset
+      VPU:  spike tile re-packed to 1-bit channel words, written to HBM
+
+The int32 membrane tile (Ho*Wo, bn) lives in a VMEM scratch buffer for
+the whole T-step scan (T is the innermost grid dim, so each (b, j) pair
+sees t = 0..T-1 consecutively and scratch persists).  Per timestep the
+only HBM traffic is one packed input spike plane (1 bit/event) and one
+packed output spike tile — the unfused float chain moves f32 currents
+and membranes through HBM at every step.
+
+Weights stay resident per (b, j) pair across all T steps (index map
+constant in t), so each packed weight tile is fetched once per batch
+element, not once per timestep.
+
+Geometry contract (enforced by ops.py): the input plane arrives
+pre-padded (Hp = (Ho-1)*stride + kh, same for W), channels are packed to
+``cin_pad = 32*ceil(c_in/32)`` 1-bit fields, the flattened weight
+contraction uses the same per-tap cin_pad layout (quant.quantize_conv),
+and n (padded c_out) is a multiple of bn with bn % 32 == 0.  Zero-padded
+spike bits and zero weight codes are inert in the accumulate, and the
+``n_out`` mask zeroes spikes of padded output channels so the packed
+words match ``packing.pack_bool`` bit-for-bit.
+
+Spatial tiling (Ho blocks with halo DMA) is a follow-up — one batch
+element's plane must currently fit the per-tile VMEM budget, which holds
+for the paper's 32x32 CNN workloads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import packing
+
+
+def _fused_conv_kernel(s_ref, w_ref, v_ref, o_ref, v_acc,
+                       *, bits: int, kh: int, kw: int, cin_pad: int,
+                       stride: int, ho: int, wo: int, n_out: int,
+                       leak_shift: int, threshold_q: int, v_reset_q: int,
+                       soft_reset: bool):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        v_acc[...] = jnp.zeros_like(v_acc)
+
+    # unpack this timestep's spike plane; packing.unpack is pure
+    # shift/mask jnp, so the shared helper traces inside the kernel and
+    # the bit layout can never diverge from the ref.py oracle's
+    s_words = s_ref[0, 0]                      # (Hp, Wp*wc)
+    hp = s_words.shape[0]
+    wp = (s_words.shape[1] * 32) // cin_pad
+    x = packing.unpack(s_words, 1, s_words.shape[1] * 32)
+    x = x.reshape(hp, wp, cin_pad).astype(jnp.int8)
+
+    # im2col gather: one strided slice per tap, concatenated in the
+    # (kh, kw, cin) order quantize_conv flattens the weight taps in
+    taps = []
+    for di in range(kh):
+        for dj in range(kw):
+            taps.append(jax.lax.slice(
+                x,
+                (di, dj, 0),
+                (di + (ho - 1) * stride + 1, dj + (wo - 1) * stride + 1,
+                 cin_pad),
+                (stride, stride, 1)))          # (Ho, Wo, cin_pad)
+    patches = jnp.concatenate(taps, axis=-1).reshape(ho * wo,
+                                                     kh * kw * cin_pad)
+
+    w_words = w_ref[...]                       # (bn, K*bits/32)
+    vpw_w = packing.WORD_BITS // bits
+    w = packing.unpack(w_words, bits,
+                       w_words.shape[-1] * vpw_w).astype(jnp.int8)
+
+    # binary x int accumulate on the MXU (multiplier-less in spirit: the
+    # left operand is {0,1}, every PE multiply is a masked pass-through)
+    i_syn = jax.lax.dot_general(
+        patches, w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )                                          # (Ho*Wo, bn)
+
+    # shift-add LIF update on the VMEM-resident membrane tile
+    v = v_acc[...]
+    v = v - (v >> leak_shift) + i_syn
+    spikes = (v >= threshold_q).astype(jnp.int32)
+    # zero spikes of zero-padded output channels so packed words are
+    # bit-identical to pack_bool of the unpadded reference
+    col = pl.program_id(1) * v.shape[1] + jax.lax.broadcasted_iota(
+        jnp.int32, v.shape, 1)
+    spikes = jnp.where(col < n_out, spikes, 0)
+    if soft_reset:
+        v = v - spikes * threshold_q
+    else:
+        v = jnp.where(spikes == 1, jnp.int32(v_reset_q), v)
+
+    v_acc[...] = v
+    v_ref[0] = v            # index map constant in t: written back once
+    o_ref[0, 0] = packing.pack_bool(spikes)  # bn % 32 == 0: no pad inserted
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "kh", "kw", "cin_pad", "stride", "ho", "wo",
+                     "n_out", "leak_shift", "threshold_q", "v_reset_q",
+                     "soft_reset", "bn", "interpret"),
+)
+def fused_conv_rollout_pallas(
+    spikes_packed_t: jnp.ndarray,  # (T, B, Hp, Wp*wc) int32, pre-padded
+    w_packed: jnp.ndarray,         # (n, kh*kw*cin_pad*bits/32) int32
+    *,
+    bits: int,
+    kh: int,
+    kw: int,
+    cin_pad: int,
+    stride: int,
+    ho: int,
+    wo: int,
+    n_out: int,                    # true c_out (<= n); masks padded channels
+    leak_shift: int,
+    threshold_q: int,
+    v_reset_q: int = 0,
+    soft_reset: bool = True,
+    bn: int = 128,
+    interpret: bool = False,
+):
+    t_steps, b, hp, wpw = spikes_packed_t.shape
+    n = w_packed.shape[0]
+    if cin_pad % 32 or (wpw * 32) % cin_pad:
+        raise ValueError(
+            f"cin_pad={cin_pad} must be a 32-multiple dividing the packed "
+            f"plane width {wpw * 32} (caller ops.py must pad channels)")
+    k_flat = kh * kw * cin_pad
+    vpw_w = packing.WORD_BITS // bits
+    if w_packed.shape[1] * vpw_w != k_flat:
+        raise ValueError(
+            f"packed contraction mismatch: weights describe "
+            f"{w_packed.shape[1] * vpw_w}, im2col needs k={k_flat}")
+    if hp < (ho - 1) * stride + kh:
+        raise ValueError("input plane shorter than the gather footprint "
+                         "(caller ops.py must pre-pad)")
+    if bn % 32 or n % bn:
+        raise ValueError("caller (ops.py) must pad c_out to bn multiples, "
+                         "bn % 32 == 0")
+    grid = (b, n // bn, t_steps)
+    kernel = functools.partial(
+        _fused_conv_kernel,
+        bits=bits, kh=kh, kw=kw, cin_pad=cin_pad, stride=stride,
+        ho=ho, wo=wo, n_out=n_out, leak_shift=leak_shift,
+        threshold_q=threshold_q, v_reset_q=v_reset_q, soft_reset=soft_reset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, hp, wpw), lambda i, j, t: (t, i, 0, 0)),
+            pl.BlockSpec((bn, w_packed.shape[1]), lambda i, j, t: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ho * wo, bn), lambda i, j, t: (i, 0, j)),
+            pl.BlockSpec((1, 1, ho * wo, bn // 32),
+                         lambda i, j, t: (t, i, 0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, ho * wo, n), jnp.int32),
+            jax.ShapeDtypeStruct((t_steps, b, ho * wo, n // 32), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((ho * wo, bn), jnp.int32)],
+        # batch and c_out tiles are independent; T carries the membrane
+        # recurrence through scratch and must stay sequential
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        cost_estimate=pl.CostEstimate(
+            flops=2 * t_steps * b * ho * wo * k_flat * n,
+            bytes_accessed=(
+                (n // bn) * spikes_packed_t.size * 4  # planes, per cout tile
+                + b * w_packed.size * 4               # weights, per b
+                + b * ho * wo * n * 4                 # membrane out
+                + t_steps * b * ho * wo * n // 8),    # spikes out
+
+            transcendentals=0,
+        ),
+        interpret=interpret,
+    )(spikes_packed_t, w_packed)

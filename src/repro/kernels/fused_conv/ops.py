@@ -1,0 +1,102 @@
+"""Public entry point for the fused packed-conv rollout (backend-dispatched).
+
+Dispatch rules (see repro.kernels.backend):
+  'jnp'       -> ref.fused_conv_rollout_ref (bit-identical scan composition)
+  'interpret' -> kernel.fused_conv_rollout_pallas(interpret=True)
+  'pallas'    -> kernel.fused_conv_rollout_pallas (compiled, TPU)
+
+The kernel path zero-pads the packed spike planes spatially (explicit
+SAME/VALID pads from ref.conv_pads — the exact amounts the oracle's XLA
+convolution uses), pads c_out to a ``bn`` tile multiple, flattens the
+(W, words) axes so the kernel sees one contiguous plane per batch
+element, then slices the padding back off.  Zero spike words are inert
+in the accumulate and the kernel masks spikes of padded channels, so
+padding never changes the visible bits.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.kernels import backend as _backend
+from repro.kernels.fused_conv import kernel as _kernel
+from repro.kernels.fused_conv import ref as _ref
+from repro.quant.formats import QuantizedConvTensor
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def fused_conv_rollout(
+    spikes_packed_t: jnp.ndarray,  # (T, B, H, W, ceil(c_in/32)) int32
+    qct: QuantizedConvTensor,      # packed HWIO integer codes
+    *,
+    stride: int = 1,
+    padding: _ref.Padding = "SAME",
+    leak_shift: int,
+    threshold_q: int,
+    v_reset_q: int = 0,
+    soft_reset: bool = True,
+    bn: int = 128,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """All T timesteps of one spiking conv layer in a single fused pass.
+
+    Returns (v_T: (B, Ho, Wo, c_out) int32,
+             out_spikes_packed: (T, B, Ho, Wo, ceil(c_out/32)) int32),
+    bit-exact with the unfused `unpack -> int conv -> lif_step ->
+    pack_bool` chain of ref.py.
+    """
+    t_steps, b, h, w, win = spikes_packed_t.shape
+    if win != packing.packed_last_dim(qct.c_in, 1):
+        raise ValueError(
+            f"spike plane carries {win} channel words, weights expect "
+            f"{packing.packed_last_dim(qct.c_in, 1)} (c_in={qct.c_in})")
+    if qct.c_in_pad != win * 32:
+        raise ValueError("quantize_conv cin_pad drifted from the spike "
+                         "word layout — requantize the weights")
+
+    if _backend.get_backend() == "jnp":
+        return _ref.fused_conv_rollout_ref(
+            spikes_packed_t, qct, stride=stride, padding=padding,
+            leak_shift=leak_shift, threshold_q=threshold_q,
+            v_reset_q=v_reset_q, soft_reset=soft_reset,
+        )
+
+    (plh, phh), (plw, phw) = _ref.conv_pads(h, w, qct.kh, qct.kw, stride,
+                                            padding)
+    ho, wo = (_ref.conv_out_size(h, qct.kh, stride, plh, phh),
+              _ref.conv_out_size(w, qct.kw, stride, plw, phw))
+    words_out = packing.packed_last_dim(qct.c_out, 1)
+    if t_steps == 0:  # degenerate rollout: match lax.scan's empty-ys result
+        return (jnp.zeros((b, ho, wo, qct.c_out), jnp.int32),
+                jnp.zeros((0, b, ho, wo, words_out), jnp.int32))
+
+    # pre-pad the packed planes: the gather footprint may run one short of
+    # the padded extent at the high edge (stride > 1), so extend to it
+    hp = max(h + plh + phh, (ho - 1) * stride + qct.kh)
+    wp = max(w + plw + phw, (wo - 1) * stride + qct.kw)
+    sp = jnp.pad(spikes_packed_t,
+                 ((0, 0), (0, 0), (plh, hp - h - plh),
+                  (plw, wp - w - plw), (0, 0)))
+    sp = sp.reshape(t_steps, b, hp, wp * win)
+
+    # one c_out tile if the layer is narrower than the default bn
+    bn_eff = min(bn, _round_up(qct.c_out, 32))
+    n_pad = _round_up(qct.c_out, bn_eff)
+    wpk = jnp.pad(qct.data, ((0, n_pad - qct.c_out), (0, 0)))
+
+    v, out = _kernel.fused_conv_rollout_pallas(
+        sp, wpk,
+        bits=qct.bits, kh=qct.kh, kw=qct.kw, cin_pad=qct.c_in_pad,
+        stride=stride, ho=ho, wo=wo, n_out=qct.c_out,
+        leak_shift=leak_shift, threshold_q=threshold_q,
+        v_reset_q=v_reset_q, soft_reset=soft_reset, bn=bn_eff,
+        interpret=(_backend.get_backend() == "interpret"),
+    )
+    v = v.reshape(b, ho, wo, n_pad)[..., :qct.c_out]
+    out = out.reshape(t_steps, b, ho, wo, n_pad // 32)[..., :words_out]
+    return v, out

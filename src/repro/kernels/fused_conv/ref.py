@@ -1,0 +1,107 @@
+"""Pure-jnp oracle for the fused packed-conv rollout.
+
+Bit-exact composition of the unfused stages the fused kernel replaces,
+per timestep:
+
+    s[t]     = unpack_bool(spikes_packed[t])             (1-bit spike plane)
+    i_syn[t] = conv_int(s[t], Wq)                        (AC unit, NHWC/HWIO)
+    v, o[t]  = lif_step_int(v, i_syn[t])                 (LIF update)
+    out[t]   = pack_bool(o[t])                           (spike re-pack, C axis)
+
+The convolution accumulates raw integer weight codes (no scales — the
+engine folds the weight scale into the integer threshold, exactly like
+the dense NCE path).  The fused kernel (kernel.py) must reproduce this
+bit for bit — int32 accumulation, floor-shift leak, soft/hard reset, and
+the 1-bit channel-axis word layout of :func:`repro.core.packing.pack_bool`
+— for bits in {2, 4, 8}, both paddings and any stride.
+
+This module also owns the conv geometry helpers (output size, explicit
+padding amounts); ops.py and the tests use the same ones, so the padded
+plane the kernel gathers from can never disagree with the oracle's.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.lif import lif_step_int
+from repro.quant.formats import QuantizedConvTensor
+from repro.quant.ptq import unpack_conv_codes
+
+Padding = Union[str, Tuple[Tuple[int, int], Tuple[int, int]]]
+
+
+def conv_out_size(size: int, k: int, stride: int, pad_lo: int,
+                  pad_hi: int) -> int:
+    return (size + pad_lo + pad_hi - k) // stride + 1
+
+
+def conv_pads(h: int, w: int, kh: int, kw: int, stride: int,
+              padding: Padding) -> Tuple[Tuple[int, int], Tuple[int, int]]:
+    """Explicit ((lo, hi), (lo, hi)) spatial pads, matching XLA's string
+    padding semantics ('SAME': out = ceil(in / stride), extra pad at the
+    high edge; 'VALID': no pad)."""
+    if isinstance(padding, str):
+        if padding.upper() == "VALID":
+            return ((0, 0), (0, 0))
+        if padding.upper() != "SAME":
+            raise ValueError(f"unsupported padding {padding!r}")
+        pads = []
+        for size, k in ((h, kh), (w, kw)):
+            out = -(-size // stride)
+            total = max((out - 1) * stride + k - size, 0)
+            pads.append((total // 2, total - total // 2))
+        return (pads[0], pads[1])
+    (plo_h, phi_h), (plo_w, phi_w) = padding
+    return ((int(plo_h), int(phi_h)), (int(plo_w), int(phi_w)))
+
+
+def conv_out_shape(h: int, w: int, qct: QuantizedConvTensor, stride: int,
+                   padding: Padding) -> Tuple[int, int]:
+    (plh, phh), (plw, phw) = conv_pads(h, w, qct.kh, qct.kw, stride, padding)
+    return (conv_out_size(h, qct.kh, stride, plh, phh),
+            conv_out_size(w, qct.kw, stride, plw, phw))
+
+
+def fused_conv_rollout_ref(
+    spikes_packed_t: jnp.ndarray,  # (T, B, H, W, ceil(c_in/32)) int32
+    qct: QuantizedConvTensor,      # packed HWIO integer codes
+    *,
+    stride: int = 1,
+    padding: Padding = "SAME",
+    leak_shift: int,
+    threshold_q: int,
+    v_reset_q: int = 0,
+    soft_reset: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """T-step integer spiking-conv rollout.
+
+    Returns (v_T: (B, Ho, Wo, c_out) int32,
+             out_spikes_packed: (T, B, Ho, Wo, ceil(c_out/32)) int32).
+    """
+    t_steps, b, h, w, _ = spikes_packed_t.shape
+    pads = conv_pads(h, w, qct.kh, qct.kw, stride, padding)
+    codes = unpack_conv_codes(qct)                 # (kh, kw, c_in, c_out)
+    s_t = packing.unpack_bool(spikes_packed_t, qct.c_in).astype(jnp.int32)
+    ho, wo = conv_out_shape(h, w, qct, stride, padding)
+    v0 = jnp.zeros((b, ho, wo, qct.c_out), jnp.int32)
+
+    def step(v, s):
+        i_syn = jax.lax.conv_general_dilated(
+            s, codes,
+            window_strides=(stride, stride),
+            padding=pads,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        v, o = lif_step_int(
+            v, i_syn,
+            leak_shift=leak_shift, threshold_q=threshold_q,
+            v_reset_q=v_reset_q, soft_reset=soft_reset,
+        )
+        return v, packing.pack_bool(o)
+
+    return jax.lax.scan(step, v0, s_t)

@@ -142,5 +142,18 @@ def fused_nce_rollout_pallas(
             jax.ShapeDtypeStruct((t_steps, m, n // 32), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        # batch and neuron tiles are independent; T carries the membrane
+        # recurrence through scratch and must stay sequential
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        cost_estimate=pl.CostEstimate(
+            flops=2 * t_steps * m * k * n,
+            bytes_accessed=(
+                (n // bn) * spikes_packed_t.size * 4  # spikes, per col tile
+                + (m // bm) * w_packed.size * 4       # weights, per row tile
+                + m * n * 4                           # membrane out
+                + t_steps * m * n // 8),              # packed spikes out
+            transcendentals=0,
+        ),
         interpret=interpret,
     )(spikes_packed_t, w_packed)

@@ -9,6 +9,12 @@ packed L-SPINE format.
 ``scale`` shrinks every channel count (scale=1 is the paper-size model;
 smoke tests use scale≈1/16).  Input: (B, H, W, C) analog images, encoded
 with direct (constant-current) coding over T timesteps.
+
+Two forward paths share one parameter pytree: the float/surrogate
+training path, and (``int_deploy=True`` + quantized precision) the
+integer deployment path that runs every post-stem layer through the
+fused packed kernels — spiking convs via kernels/fused_conv, the FC
+head via kernels/fused_nce — with 1-bit spike traffic between layers.
 """
 
 from __future__ import annotations
@@ -24,9 +30,12 @@ from repro.core.snn_layers import (
     avgpool_t,
     conv_init,
     dense_init,
+    maxpool_t,
     readout_apply,
     spiking_conv_apply,
+    spiking_conv_int_apply,
     spiking_dense_apply,
+    spiking_dense_int_apply,
 )
 from repro.quant.formats import PrecisionConfig
 
@@ -62,9 +71,18 @@ class SNNConfig:
     scale: float = 1.0
     lif: LIFConfig = LIFConfig(leak_shift=3, threshold=1.0)
     precision: PrecisionConfig = PrecisionConfig(bits=16)
+    # integer deployment: route every spiking layer after the
+    # direct-encoded stem through the fused packed kernels
+    # (kernels/fused_conv + fused_nce) instead of the float/fake-quant
+    # training twins.  Requires a quantized ``precision``.
+    int_deploy: bool = False
 
     def ch(self, c: int) -> int:
         return max(8, int(c * self.scale))
+
+    @property
+    def int_path(self) -> bool:
+        return self.int_deploy and self.precision.quantized
 
 
 # ---------------------------------------------------------------------------
@@ -95,20 +113,45 @@ def vgg_init(key, cfg: SNNConfig):
     return params
 
 
-def vgg_apply(params, cfg: SNNConfig, images: jnp.ndarray) -> jnp.ndarray:
-    """images: (B, H, W, C) in [0,1].  Returns logits (B, n_classes)."""
+def _record_rate(rates, x):
+    if rates is not None:
+        rates.append(float(jnp.mean(x.astype(jnp.float32))))
+
+
+def vgg_apply(params, cfg: SNNConfig, images: jnp.ndarray,
+              _rates=None) -> jnp.ndarray:
+    """images: (B, H, W, C) in [0,1].  Returns logits (B, n_classes).
+
+    With ``cfg.int_deploy`` every layer past the first conv runs on the
+    fused integer datapath: the stem consumes direct-encoded analog
+    currents and stays on the float twin (its input is not 1-bit), but
+    its binary output spikes feed packed-conv rollouts from there on.
+    Pools become spike-preserving max pools (an OR for {0,1} planes) so
+    the inter-layer traffic stays 1-bit packable.
+    """
     pc = cfg.precision if cfg.precision.quantized else None
     x = jnp.broadcast_to(images, (cfg.timesteps, *images.shape))
     ci = 0
     for item in effective_plan(cfg.img_size, _base_plan(cfg)):
         if item == "P":
-            x = avgpool_t(x)
+            x = maxpool_t(x) if cfg.int_path else avgpool_t(x)
         else:
-            x = spiking_conv_apply(params["convs"][ci], x, cfg.lif, pc)
+            if cfg.int_path and ci > 0:
+                x = spiking_conv_int_apply(params["convs"][ci], x, cfg.lif,
+                                           cfg.precision)
+            else:
+                x = spiking_conv_apply(params["convs"][ci], x, cfg.lif, pc)
+                if cfg.int_path:
+                    x = x.astype(jnp.int32)
+            _record_rate(_rates, x)
             ci += 1
     T, B = x.shape[0], x.shape[1]
     x = x.reshape(T, B, -1)
-    x = spiking_dense_apply(params["fc1"], x, cfg.lif, pc)
+    if cfg.int_path:
+        x = spiking_dense_int_apply(params["fc1"], x, cfg.lif, cfg.precision)
+    else:
+        x = spiking_dense_apply(params["fc1"], x, cfg.lif, pc)
+    _record_rate(_rates, x)
     return readout_apply(params["head"], x)
 
 
@@ -139,18 +182,43 @@ def resnet_init(key, cfg: SNNConfig):
     return params
 
 
-def resnet_apply(params, cfg: SNNConfig, images: jnp.ndarray) -> jnp.ndarray:
+def resnet_apply(params, cfg: SNNConfig, images: jnp.ndarray,
+                 _rates=None) -> jnp.ndarray:
+    """With ``cfg.int_deploy`` the stem stays on the float twin (its
+    input is direct-encoded analog current) and every residual block —
+    both 3x3 convs, strides and the 1x1 projection shortcuts — runs the
+    fused packed-conv rollout.  The residual merge becomes an OR
+    (``maximum`` of {0,1} planes) so the block output stays 1-bit
+    packable; the float path's rate-preserving ``(h + sc) * 0.5`` would
+    emit fractional events no packed datapath can carry.
+    """
     pc = cfg.precision if cfg.precision.quantized else None
     x = jnp.broadcast_to(images, (cfg.timesteps, *images.shape))
     x = spiking_conv_apply(params["stem"], x, cfg.lif, pc)
+    if cfg.int_path:
+        x = x.astype(jnp.int32)
+    _record_rate(_rates, x)
     for blk in params["blocks"]:
         s = blk["stride"]
-        h = spiking_conv_apply(blk["conv1"], x, cfg.lif, pc, stride=s)
-        h = spiking_conv_apply(blk["conv2"], h, cfg.lif, pc)
-        sc = x
-        if "proj" in blk:
-            sc = spiking_conv_apply(blk["proj"], x, cfg.lif, pc, stride=s)
-        x = (h + sc) * 0.5   # spike-rate-preserving residual merge
+        if cfg.int_path:
+            h = spiking_conv_int_apply(blk["conv1"], x, cfg.lif,
+                                       cfg.precision, stride=s)
+            h = spiking_conv_int_apply(blk["conv2"], h, cfg.lif,
+                                       cfg.precision)
+            sc = x
+            if "proj" in blk:
+                sc = spiking_conv_int_apply(blk["proj"], x, cfg.lif,
+                                            cfg.precision, stride=s)
+            x = jnp.maximum(h, sc)   # spike OR: binary-preserving merge
+        else:
+            h = spiking_conv_apply(blk["conv1"], x, cfg.lif, pc, stride=s)
+            h = spiking_conv_apply(blk["conv2"], h, cfg.lif, pc)
+            sc = x
+            if "proj" in blk:
+                sc = spiking_conv_apply(blk["proj"], x, cfg.lif, pc,
+                                        stride=s)
+            x = (h + sc) * 0.5   # spike-rate-preserving residual merge
+        _record_rate(_rates, x)
     x = jnp.mean(x, axis=(2, 3))            # (T, B, C) global avg pool
     return readout_apply(params["head"], x)
 
@@ -227,6 +295,16 @@ def calibrate(params, cfg: SNNConfig, images):
 def apply(params, cfg: SNNConfig, images):
     return (resnet_apply if cfg.model == "resnet18" else vgg_apply)(
         params, cfg, images)
+
+
+def apply_with_rates(params, cfg: SNNConfig, images):
+    """Forward pass that also reports per-spiking-layer mean firing rates
+    (eager-only instrumentation — used to compare the float and integer
+    deployment paths' spike activity)."""
+    rates = []
+    logits = (resnet_apply if cfg.model == "resnet18" else vgg_apply)(
+        params, cfg, images, _rates=rates)
+    return logits, rates
 
 
 def count_macs(cfg: SNNConfig) -> int:

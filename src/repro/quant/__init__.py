@@ -1,11 +1,25 @@
-from repro.quant.formats import PrecisionConfig, QuantizedTensor
-from repro.quant.ptq import quantize, dequantize
+from repro.quant.formats import (
+    PrecisionConfig,
+    QuantizedConvTensor,
+    QuantizedTensor,
+)
+from repro.quant.ptq import (
+    dequantize,
+    dequantize_conv,
+    quantize,
+    quantize_conv,
+    unpack_conv_codes,
+)
 from repro.quant.qat import fake_quant
 
 __all__ = [
     "PrecisionConfig",
+    "QuantizedConvTensor",
     "QuantizedTensor",
     "quantize",
     "dequantize",
+    "quantize_conv",
+    "dequantize_conv",
+    "unpack_conv_codes",
     "fake_quant",
 ]

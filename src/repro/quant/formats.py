@@ -121,3 +121,75 @@ class QuantizedTensor:
 
     def compression_ratio(self) -> float:
         return self.nbytes_dense_fp32() / self.nbytes_packed()
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedConvTensor:
+    """Packed low-precision conv weights for the fused conv datapath.
+
+    The logical tensor is HWIO ``(kh, kw, c_in, c_out)`` float weights.  The
+    packed form is matmul-ready for the im2col kernel: per output channel
+    the taps are flattened ``(kh, kw, c_in_pad)`` with ``c_in`` zero-padded
+    to a spike-word multiple (``c_in_pad = 32 * ceil(c_in / 32)``) so the
+    contraction layout matches what an in-kernel 1-bit unpack of a packed
+    spike plane produces, tap for tap and channel for channel.
+
+    data:     int32 words, (c_out, kh*kw*c_in_pad * bits / 32).
+    scale:    float32 per-output-channel scales, (c_out, 1).
+    shape:    logical HWIO shape.
+    bits:     field width (2/4/8).
+    c_in_pad: padded input-channel count baked into the flattened layout.
+    """
+
+    data: jnp.ndarray
+    scale: jnp.ndarray
+    shape: Tuple[int, ...]
+    bits: int
+    c_in_pad: int
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.data, self.scale), (self.shape, self.bits, self.c_in_pad)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, scale = children
+        shape, bits, c_in_pad = aux
+        return cls(data, scale, shape, bits, c_in_pad)
+
+    # -- convenience ---------------------------------------------------------
+    @property
+    def kh(self) -> int:
+        return self.shape[0]
+
+    @property
+    def kw(self) -> int:
+        return self.shape[1]
+
+    @property
+    def c_in(self) -> int:
+        return self.shape[2]
+
+    @property
+    def c_out(self) -> int:
+        return self.shape[3]
+
+    @property
+    def k_flat(self) -> int:
+        """Flattened contraction length seen by the im2col matmul."""
+        return self.kh * self.kw * self.c_in_pad
+
+    def nbytes_packed(self) -> int:
+        import numpy as np
+
+        return (int(np.prod(self.data.shape)) +
+                int(np.prod(self.scale.shape))) * 4
+
+    def nbytes_dense_fp32(self) -> int:
+        import numpy as np
+
+        return int(np.prod(self.shape)) * 4
+
+    def compression_ratio(self) -> float:
+        return self.nbytes_dense_fp32() / self.nbytes_packed()

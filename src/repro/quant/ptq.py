@@ -16,7 +16,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import packing
-from repro.quant.formats import PrecisionConfig, QuantizedTensor
+from repro.quant.formats import (
+    PrecisionConfig,
+    QuantizedConvTensor,
+    QuantizedTensor,
+)
 
 
 def _group_reshape(x: jnp.ndarray, group_size: int) -> jnp.ndarray:
@@ -92,6 +96,58 @@ def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jnp.ndarray:
     if qt.zero is not None:
         out = out + qt.zero[..., None]
     return out.reshape(qt.shape).astype(dtype)
+
+
+def quantize_conv(w: jnp.ndarray, cfg: PrecisionConfig) -> QuantizedConvTensor:
+    """Quantize HWIO conv weights ``(kh, kw, c_in, c_out)`` to the packed
+    im2col layout of the fused conv kernel (kernels/fused_conv).
+
+    Per-output-channel symmetric absmax over the whole tap (the same
+    grouping the fake-quant training twin uses in
+    ``snn_layers.spiking_conv_apply``), then the integer codes are
+    rearranged ``(c_out, kh, kw, c_in)``, the channel axis zero-padded to a
+    32-spike-word multiple, flattened and sub-word packed.  The zero pads
+    line up with the zero bits an in-kernel unpack of a packed spike plane
+    yields for channels beyond ``c_in``, so padding never changes a single
+    accumulated bit.
+    """
+    if not cfg.quantized:
+        raise ValueError("bits=16 conv weights are not packed; keep dense")
+    if not cfg.symmetric or cfg.group_size != -1:
+        raise ValueError(
+            "quantize_conv: the fused conv datapath folds one scale per "
+            "output channel into the integer threshold — only symmetric "
+            "per-channel (group_size=-1) quantization is supported")
+    kh, kw, c_in, c_out = w.shape
+    wt = w.astype(jnp.float32).transpose(3, 0, 1, 2).reshape(c_out, -1)
+    q, scale, _ = quantize_int(wt, cfg)            # (c_out, kh*kw*c_in)
+    c_in_pad = 32 * packing.packed_last_dim(c_in, 1)
+    q = q.reshape(c_out, kh, kw, c_in)
+    q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, c_in_pad - c_in)))
+    data = packing.pack(q.reshape(c_out, kh * kw * c_in_pad), cfg.bits)
+    return QuantizedConvTensor(
+        data=data,
+        scale=scale.astype(jnp.float32),
+        shape=(kh, kw, c_in, c_out),
+        bits=cfg.bits,
+        c_in_pad=c_in_pad,
+    )
+
+
+def dequantize_conv(qct: QuantizedConvTensor, dtype=jnp.float32) -> jnp.ndarray:
+    """Unpack + rescale back to dense HWIO floats (oracle/debug path)."""
+    q = packing.unpack(qct.data, qct.bits, qct.k_flat).astype(jnp.float32)
+    q = q * qct.scale                              # (c_out, kh*kw*c_in_pad)
+    q = q.reshape(qct.c_out, qct.kh, qct.kw, qct.c_in_pad)[..., :qct.c_in]
+    return q.transpose(1, 2, 3, 0).astype(dtype)
+
+
+def unpack_conv_codes(qct: QuantizedConvTensor) -> jnp.ndarray:
+    """Integer codes in HWIO layout ``(kh, kw, c_in, c_out)`` — the jnp
+    oracle's operand for integer convolution (no scales applied)."""
+    q = packing.unpack(qct.data, qct.bits, qct.k_flat)
+    q = q.reshape(qct.c_out, qct.kh, qct.kw, qct.c_in_pad)[..., :qct.c_in]
+    return q.transpose(1, 2, 3, 0)
 
 
 def quantize_error(w: jnp.ndarray, cfg: PrecisionConfig) -> jnp.ndarray:
