@@ -1,0 +1,100 @@
+"""Serve-path benchmark: packed SNN deployment + batched spiking serving.
+
+Measures what the deploy subsystem buys on the serving path:
+
+  * ``deploy_ms``    — one-shot pack cost (paid once, off the hot path)
+  * ``percall_us``   — forward that re-quantizes every layer per call
+                       (the old ``int_deploy`` hot path)
+  * ``packaged_us``  — same forward from the pre-packed DeployedModel
+  * engine records   — mixed-size synthetic stream through
+                       SNNServeEngine: img/s, latency percentiles,
+                       compile counts (zero recompiles after warmup)
+
+Emits CSV lines via bench_lib and writes ``BENCH_serve.json`` next to
+this file.  Run:  PYTHONPATH=src python benchmarks/serve_bench.py --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+import bench_lib
+
+from repro.configs import add_geometry_flags  # noqa: E402
+
+ap = argparse.ArgumentParser()
+add_geometry_flags(ap)
+ap.add_argument("--model", default="vgg9",
+                choices=("vgg9", "vgg16", "resnet18"))
+ap.add_argument("--requests", type=int, default=24)
+ap.add_argument("--max-batch", type=int, default=8)
+args = ap.parse_args()
+
+from repro.deploy import (                                   # noqa: E402
+    SNNEngineConfig, SNNRequest, SNNServeEngine, deploy, deploy_config,
+)
+from repro.models import snn_cnn                             # noqa: E402
+
+print("name,us_per_call,derived")
+for bits in (2, 4, 8):
+    cfg = deploy_config(args.model, bits, smoke=args.smoke)
+    params = snn_cnn.init(jax.random.PRNGKey(0), cfg)
+    images = np.asarray(
+        np.random.default_rng(0).random(
+            (4, cfg.img_size, cfg.img_size, cfg.in_channels)),
+        np.float32)
+
+    t0 = time.perf_counter()
+    model = deploy(params, cfg)
+    jax.block_until_ready([lp.qt.data for lp in model.layers.values()])
+    deploy_ms = (time.perf_counter() - t0) * 1e3
+
+    percall = jax.jit(
+        lambda p, x: snn_cnn.apply(p, cfg, x))
+    packaged = jax.jit(
+        lambda m, x: m.apply(x))
+    us_percall = bench_lib.time_call(percall, params, images)
+    us_packaged = bench_lib.time_call(packaged, model, images)
+    bench_lib.emit(
+        f"snn_forward/{args.model}/w{bits}/percall", us_percall,
+        f"bits={bits};layers={len(model.layers)}")
+    bench_lib.emit(
+        f"snn_forward/{args.model}/w{bits}/packaged", us_packaged,
+        f"bits={bits};deploy_ms={deploy_ms:.1f}"
+        f";speedup={us_percall / max(us_packaged, 1e-9):.2f}x"
+        f";packed_mb={model.nbytes_packed() / 1e6:.3f}"
+        f";compression={model.compression_ratio():.1f}x")
+
+    # mixed-size request stream through the bucket-cached engine
+    eng = SNNServeEngine(model, SNNEngineConfig(max_batch=args.max_batch))
+    eng.warmup()
+    warm_compiles = eng.compile_count
+    rng = np.random.default_rng(bits)
+    uid = 0
+    t0 = time.perf_counter()
+    while uid < args.requests:
+        burst = int(rng.integers(1, args.max_batch + 1))
+        for _ in range(min(burst, args.requests - uid)):
+            eng.add_request(SNNRequest(
+                uid=uid,
+                image=rng.random((cfg.img_size, cfg.img_size,
+                                  cfg.in_channels)).astype(np.float32)))
+            uid += 1
+        eng.step()
+    stats = eng.run_until_done()
+    wall = time.perf_counter() - t0
+    recompiles = eng.compile_count - warm_compiles
+    assert recompiles == 0, f"recompiled after warmup: {recompiles}"
+    bench_lib.emit(
+        f"snn_serve/{args.model}/w{bits}", 1e6 * wall / stats["requests"],
+        f"bits={bits};images_per_s={stats['requests'] / wall:.1f}"
+        f";batches={stats['batches']};compiles={stats['compiles']}"
+        f";recompiles_after_warmup={recompiles}"
+        f";latency_p50_ms={stats['latency_p50_ms']:.2f}"
+        f";latency_p95_ms={stats['latency_p95_ms']:.2f}")
+
+bench_lib.write_json("serve")

@@ -29,6 +29,16 @@ _MODULES = {
 ARCH_IDS = tuple(_MODULES)
 
 
+def add_geometry_flags(ap) -> None:
+    """The --smoke (default) / --full pair every launcher and benchmark
+    shares; both write ``args.smoke``."""
+    ap.add_argument("--smoke", dest="smoke", action="store_true",
+                    default=True,
+                    help="reduced model geometry (default)")
+    ap.add_argument("--full", dest="smoke", action="store_false",
+                    help="paper-size model geometry")
+
+
 def get_config(arch_id: str, smoke: bool = False) -> ArchConfig:
     if arch_id not in _MODULES:
         raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")

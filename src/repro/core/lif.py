@@ -48,6 +48,24 @@ class LIFConfig:
 # Integer (deployment) semantics
 # ---------------------------------------------------------------------------
 
+def as_theta_vector(threshold_q, n: int) -> jnp.ndarray:
+    """Normalize an integer threshold to a per-channel ``(n,)`` int32 vector.
+
+    The fused kernels take the folded threshold as a per-output-channel
+    operand (theta_q[c] ~ theta / scale[c]); a python/int scalar broadcasts
+    to a constant vector, so legacy scalar callers keep their semantics
+    bit for bit.
+    """
+    t = jnp.asarray(threshold_q, jnp.int32)
+    if t.ndim == 0:
+        return jnp.full((n,), t, jnp.int32)
+    t = t.reshape(-1)
+    if t.shape[0] != n:
+        raise ValueError(
+            f"threshold_q vector has {t.shape[0]} channels, layer has {n}")
+    return t
+
+
 def lif_step_int(
     v: jnp.ndarray,           # int32 membrane potential
     i_syn: jnp.ndarray,       # int32 synaptic current (already accumulated)
@@ -57,7 +75,12 @@ def lif_step_int(
     v_reset_q: int = 0,
     soft_reset: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """One multiplier-less integer LIF update.  Returns (v', spikes)."""
+    """One multiplier-less integer LIF update.  Returns (v', spikes).
+
+    ``threshold_q`` is a scalar or a per-output-channel int32 vector that
+    broadcasts along the last (channel) axis — the per-channel threshold
+    fold the deployment path uses (theta_q[c] ~ theta / scale[c]).
+    """
     v = v.astype(jnp.int32)
     # Arithmetic right shift: for v >= 0 this is floor(v / 2^k); JAX's >>
     # on signed ints is arithmetic, matching the RTL barrel shifter.

@@ -23,19 +23,49 @@ from repro.quant.formats import PrecisionConfig
 from repro.quant.qat import fake_quant
 
 
-def _fold_threshold_q(scale, lif: LIFConfig, fn_name: str) -> int:
-    """Fold the float threshold into the integer domain through the mean
-    weight scale (theta_q ~ theta / scale).  The kernels take theta_q as
-    a static parameter, so the fold needs a concrete scale — auto-folding
-    only works outside jit; traced callers pass threshold_q explicitly."""
-    try:
-        s = float(jnp.mean(scale))
-    except jax.errors.ConcretizationTypeError as e:
-        raise ValueError(
-            f"{fn_name}: threshold_q must be passed explicitly under jit "
-            "— the integer threshold fold needs a concrete weight scale"
-        ) from e
-    return max(1, int(round(lif.threshold / max(s, 1e-12))))
+def _fold_threshold_q(scale, lif: LIFConfig) -> jnp.ndarray:
+    """Fold the float threshold into the integer domain per output channel
+    (theta_q[c] ~ theta / scale[c]).
+
+    ``scale`` is the quantizer's per-channel scale array, shape
+    ``(n_out, n_groups)`` — one group for the per-channel quantization the
+    integer datapath uses, so the fold is exact per channel; grouped
+    scales average across groups (the accumulate ignores group boundaries
+    and the fold can only carry one constant per channel).  The result is
+    a traced-friendly int32 vector: it rides as an array operand on the
+    fused kernels, so the fold works under jit.
+    """
+    s = jnp.asarray(scale, jnp.float32)
+    if s.ndim > 1:
+        s = jnp.mean(s, axis=-1)
+    s = s.reshape(-1)
+    theta = jnp.round(lif.threshold / jnp.maximum(s, 1e-12))
+    return jnp.maximum(theta, 1.0).astype(jnp.int32)
+
+
+def pack_dense_weights(params, pc: PrecisionConfig):
+    """Quantize + pack a dense layer's float params to the NCE format,
+    threshold-balancing gain folded in.  The single code site behind both
+    the per-call int twin and the one-shot deploy package
+    (repro.deploy.package) — their bit-exactness contract lives here.
+    Returns a packed ``QuantizedTensor`` in (d_out, d_in) layout."""
+    from repro.quant.ptq import quantize
+
+    w = params["w"]                       # (d_in, d_out) float
+    if "g" in params:
+        w = w * params["g"]
+    return quantize(w.T, pc)
+
+
+def pack_conv_weights(params, pc: PrecisionConfig):
+    """Conv twin of :func:`pack_dense_weights`: HWIO float params ->
+    packed ``QuantizedConvTensor`` (gain folded in)."""
+    from repro.quant.ptq import quantize_conv
+
+    w = params["w"]                       # (kh, kw, c_in, c_out) float
+    if "g" in params:
+        w = w * params["g"]
+    return quantize_conv(w, pc)
 
 
 def _maybe_fq(w: jnp.ndarray, pc: Optional[PrecisionConfig]) -> jnp.ndarray:
@@ -79,7 +109,8 @@ def spiking_dense_int_apply(
     spikes_t: jnp.ndarray,      # (T, B, d_in) — {0,1} binary spikes
     lif: LIFConfig,
     pc: PrecisionConfig,
-    threshold_q: Optional[int] = None,
+    threshold_q=None,
+    qt=None,
 ):
     """Integer deployment twin of :func:`spiking_dense_apply`.
 
@@ -88,30 +119,34 @@ def spiking_dense_int_apply(
     all T timesteps through the fused NCE rollout kernel: spikes are
     bit-packed once on entry, the membrane stays on-chip for the whole
     scan, and the layer's output spikes come back as 1-bit words.  The
-    float threshold is folded into the integer domain (theta_q ~ theta /
-    mean weight scale) exactly as core/nce.py folds scaling out of the
-    datapath.
+    float threshold is folded into the integer domain per output channel
+    (theta_q[c] ~ theta / scale[c]) exactly as core/nce.py folds scaling
+    out of the datapath.
+
+    Quantization (incl. the 2/4-bit MSE clip search) reruns on every
+    call when quantizing from float params; latency-sensitive callers
+    should quantize once at deployment time (repro.deploy.package) and
+    pass the packed ``qt`` (with ``threshold_q``) instead — ``params``
+    is then ignored.
 
     Returns (T, B, d_out) {0,1} int32 spikes.
     """
-    from repro.core.nce import NCEConfig, NeuronComputeEngine
-    from repro.quant.ptq import quantize
+    from repro.kernels import fused_nce_ops
 
-    w = params["w"]                       # (d_in, d_out) float
-    if "g" in params:  # fold the calibrated threshold-balancing gain
-        w = w * params["g"]
-    qt = quantize(w.T, pc)                # packed (d_out, d_in)
+    if qt is None:
+        qt = pack_dense_weights(params, pc)
+    if qt.bits != pc.bits:
+        raise ValueError(f"packed weights are {qt.bits}-bit, "
+                         f"precision asks for {pc.bits}-bit")
     if threshold_q is None:
-        threshold_q = _fold_threshold_q(qt.scale, lif,
-                                        "spiking_dense_int_apply")
-    eng = NeuronComputeEngine(
-        NCEConfig(precision=pc, leak_shift=lif.leak_shift,
-                  threshold_q=threshold_q, soft_reset=lif.soft_reset),
-        qt,
-    )
+        threshold_q = _fold_threshold_q(qt.scale, lif)
+    d_out, d_in = qt.shape
     packed_in = packing.pack_bool(spikes_t.astype(jnp.int32))
-    _, packed_out = eng.rollout(packed_in)
-    return packing.unpack_bool(packed_out, eng.d_out)
+    _, packed_out = fused_nce_ops.fused_nce_rollout(
+        packed_in, qt, d_in=d_in, leak_shift=lif.leak_shift,
+        threshold_q=threshold_q, soft_reset=lif.soft_reset,
+    )
+    return packing.unpack_bool(packed_out, d_out)
 
 
 # ---------------------------------------------------------------------------
@@ -163,7 +198,7 @@ def spiking_conv_int_apply(
     lif: LIFConfig,
     pc: PrecisionConfig,
     stride: int = 1,
-    threshold_q: Optional[int] = None,
+    threshold_q=None,
     qct=None,
 ):
     """Integer deployment twin of :func:`spiking_conv_apply`.
@@ -174,28 +209,27 @@ def spiking_conv_int_apply(
     (kernels/fused_conv): spike planes are bit-packed along the channel
     axis once on entry, the membrane stays on-chip for the whole scan,
     and the output spikes come back as 1-bit channel words.  The float
-    threshold folds into the integer domain through the mean per-channel
-    weight scale, exactly like the dense twin.
+    threshold folds into the integer domain per output channel
+    (theta_q[c] ~ theta / scale[c]), exactly like the dense twin.
 
     Quantization (incl. the 2/4-bit MSE clip search) reruns on every
     call when quantizing from float params; latency-sensitive callers
-    should quantize once at deployment time and pass the packed ``qct``
-    (with ``threshold_q``) instead — ``params`` is then ignored.
+    should quantize once at deployment time (repro.deploy.package) and
+    pass the packed ``qct`` (with ``threshold_q``) instead — ``params``
+    is then ignored.
 
     Returns (T, B, Ho, Wo, c_out) {0,1} int32 spikes (SAME padding, as
     the float path's ``_conv2d``).
     """
     from repro.kernels import fused_conv_ops
-    from repro.quant.ptq import quantize_conv
 
     if qct is None:
-        w = params["w"]                   # (kh, kw, c_in, c_out) float
-        if "g" in params:  # fold the calibrated threshold-balancing gain
-            w = w * params["g"]
-        qct = quantize_conv(w, pc)
+        qct = pack_conv_weights(params, pc)
+    if qct.bits != pc.bits:
+        raise ValueError(f"packed weights are {qct.bits}-bit, "
+                         f"precision asks for {pc.bits}-bit")
     if threshold_q is None:
-        threshold_q = _fold_threshold_q(qct.scale, lif,
-                                        "spiking_conv_int_apply")
+        threshold_q = _fold_threshold_q(qct.scale, lif)
     packed_in = packing.pack_bool(spikes_t.astype(jnp.int32))
     _, packed_out = fused_conv_ops.fused_conv_rollout(
         packed_in, qct, stride=stride, padding="SAME",

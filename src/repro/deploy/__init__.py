@@ -1,0 +1,22 @@
+"""SNN deployment runtime: one-shot model packing + batched serving.
+
+``deploy(params, cfg)`` packs a trained float SNN into the integer
+L-SPINE format once (package.py); ``SNNServeEngine`` serves batched
+rate-coded inference requests from the packed model with bucket-cached
+compiles (engine.py).  See deploy/README.md for the package format and
+the engine contract.
+"""
+
+from repro.deploy.engine import (       # noqa: F401
+    SNNEngineConfig,
+    SNNRequest,
+    SNNServeEngine,
+)
+from repro.deploy.package import (      # noqa: F401
+    PACKAGE_FORMAT_VERSION,
+    DeployedModel,
+    PackedLayer,
+    deploy,
+    deploy_config,
+    load,
+)

@@ -1,0 +1,259 @@
+"""Batched serve engine for packed spiking models.
+
+The spiking analogue of serve/engine.py's continuous-batching LM engine:
+requests are single rate-coded inferences (one image in, one logit
+vector out after T timesteps), so there is no KV state to keep live —
+the scheduling problem collapses to micro-batching.  The engine pulls up
+to ``max_batch`` queued requests per step, pads them to the smallest
+configured batch **bucket**, and runs one jit-compiled forward of the
+:class:`~repro.deploy.package.DeployedModel` per bucket shape.
+
+Buckets are the latency/compile trade: XLA specializes on the batch
+dimension, so serving raw ragged batch sizes would recompile on every
+new size.  The engine AOT-compiles (``jit.lower().compile()``) one
+executable per bucket on first use and caches it — after warmup a mixed
+size request stream runs with ZERO recompiles (``compile_count`` stays
+at the bucket count; tests assert on it).  The packed model rides as a
+pytree *argument* of the compiled forward, not as baked-in constants,
+so hot-swapping a package never invalidates the cache.
+
+``data_parallel=True`` wraps the forward in a ``shard_map`` over the
+local devices' ``data`` axis (bucket sizes round up to a device
+multiple) — the single-host version of the production mesh in
+launch/mesh.py.
+
+Accounting: every request records queue + compute latency; ``stats()``
+aggregates throughput (img/s), per-bucket batch counts, and the compile
+count.  benchmarks/serve_bench.py turns these into BENCH_serve.json.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.deploy.package import DeployedModel
+
+
+@dataclasses.dataclass
+class SNNRequest:
+    uid: int
+    image: Optional[np.ndarray]      # (H, W, C) float in [0, 1]; dropped
+                                     # (set to None) once served
+    # filled by the engine:
+    logits: Optional[np.ndarray] = None
+    pred: Optional[int] = None
+    latency_s: float = 0.0           # enqueue -> result (incl. queue wait)
+    compute_s: float = 0.0           # the batched forward's share
+
+
+@dataclasses.dataclass
+class SNNEngineConfig:
+    max_batch: int = 8
+    # batch-size buckets the engine compiles for; () = powers of two up
+    # to max_batch.  A partial microbatch pads up to the next bucket.
+    buckets: Tuple[int, ...] = ()
+    # shard_map the forward over the local devices' data axis
+    data_parallel: bool = False
+
+    def resolved_buckets(self, n_dev: int = 1) -> Tuple[int, ...]:
+        bks = self.buckets
+        if not bks:
+            bks, b = [], 1
+            while b < self.max_batch:
+                bks.append(b)
+                b *= 2
+            bks.append(self.max_batch)
+        up = lambda b: -(-b // n_dev) * n_dev  # ceil to a device multiple
+        return tuple(sorted({up(b) for b in bks}))
+
+
+class SNNServeEngine:
+    """Micro-batching serve loop over a packed SNN.
+
+    ``model`` is a :class:`DeployedModel` (one-shot packed weights +
+    folded thresholds) — the engine never touches the quantizer.
+    """
+
+    def __init__(self, model: DeployedModel, ecfg: SNNEngineConfig):
+        cfg = model.cfg
+        if not cfg.int_path:
+            raise ValueError("SNNServeEngine serves the packed integer "
+                             "path (cfg needs int_deploy + quantized)")
+        self.model = model
+        self.ecfg = ecfg
+        self.cfg = cfg
+        self.queue: deque = deque()
+        self.done: Dict[int, SNNRequest] = {}
+
+        self._mesh = None
+        n_dev = 1
+        if ecfg.data_parallel:
+            n_dev = len(jax.devices())
+            self._mesh = jax.make_mesh((n_dev,), ("data",))
+        self.buckets = ecfg.resolved_buckets(n_dev)
+        self._fwd = self._build_forward()
+        # bucket -> AOT-compiled executable; compiles happen exactly here
+        self._compiled: Dict[int, jax.stages.Compiled] = {}
+        self.compile_count = 0
+        # O(1)-memory batch accounting (a long-lived server must not
+        # accumulate per-batch records): bucket -> count, plus totals
+        self.per_bucket: Dict[int, int] = {}
+        self.total_batches = 0
+        self.total_compute_s = 0.0
+        # ...and O(1) request accounting, so draining ``done`` through
+        # pop_result never zeroes the serving stats
+        self.total_requests = 0
+        self.total_latency_s = 0.0
+        self.max_latency_s = 0.0
+
+    # -- compile plumbing ----------------------------------------------------
+
+    def _build_forward(self):
+        def fwd(package: DeployedModel, images: jnp.ndarray) -> jnp.ndarray:
+            return package.apply(images)
+
+        if self._mesh is None:
+            return fwd
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        # model replicated, batch split over the data axis; check_rep off —
+        # the packed forward's pallas/interpret kernels confuse the
+        # replication checker on some jax versions
+        return shard_map(fwd, mesh=self._mesh,
+                         in_specs=(P(), P("data")),
+                         out_specs=P("data"), check_rep=False)
+
+    def _executable(self, bucket: int):
+        exe = self._compiled.get(bucket)
+        if exe is None:
+            cfg = self.cfg
+            spec = jax.ShapeDtypeStruct(
+                (bucket, cfg.img_size, cfg.img_size, cfg.in_channels),
+                jnp.float32)
+            exe = jax.jit(self._fwd).lower(self.model, spec).compile()
+            self._compiled[bucket] = exe
+            self.compile_count += 1
+        return exe
+
+    def warmup(self) -> int:
+        """Pre-compile every bucket (pulls compile time off the serving
+        path).  Returns the number of executables built."""
+        for b in self.buckets:
+            self._executable(b)
+        return len(self._compiled)
+
+    def bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    # -- request plumbing ----------------------------------------------------
+
+    def add_request(self, req: SNNRequest):
+        cfg = self.cfg
+        want = (cfg.img_size, cfg.img_size, cfg.in_channels)
+        if tuple(req.image.shape) != want:
+            raise ValueError(f"request {req.uid}: image shape "
+                             f"{tuple(req.image.shape)} != model {want}")
+        req._t0 = time.time()
+        self.queue.append(req)
+
+    # -- main loop -----------------------------------------------------------
+
+    def step(self) -> int:
+        """Serve one microbatch (up to max_batch queued requests, padded
+        to the next bucket).  Returns the number of requests completed."""
+        if not self.queue:
+            return 0
+        batch: List[SNNRequest] = []
+        cap = min(self.ecfg.max_batch, self.buckets[-1])
+        while self.queue and len(batch) < cap:
+            batch.append(self.queue.popleft())
+        n = len(batch)
+        bucket = self.bucket_for(n)
+        exe = self._executable(bucket)
+
+        images = np.zeros((bucket, self.cfg.img_size, self.cfg.img_size,
+                           self.cfg.in_channels), np.float32)
+        for i, req in enumerate(batch):
+            images[i] = req.image
+        t0 = time.time()
+        logits = exe(self.model, jnp.asarray(images))
+        logits = np.asarray(jax.block_until_ready(logits))
+        dt = time.time() - t0
+        self.per_bucket[bucket] = self.per_bucket.get(bucket, 0) + 1
+        self.total_batches += 1
+        self.total_compute_s += dt
+
+        now = time.time()
+        for i, req in enumerate(batch):
+            req.image = None        # consumed — don't retain every input
+            req.logits = logits[i]
+            req.pred = int(np.argmax(logits[i]))
+            req.compute_s = dt
+            req.latency_s = now - req._t0
+            self.total_requests += 1
+            self.total_latency_s += req.latency_s
+            self.max_latency_s = max(self.max_latency_s, req.latency_s)
+            self.done[req.uid] = req
+        return n
+
+    def pop_result(self, uid: int) -> SNNRequest:
+        """Remove and return a completed request.  Long-lived servers
+        must drain ``done`` through here (or clear it) — the engine never
+        evicts on its own.  Counts/throughput/avg/max in ``stats()`` come
+        from running totals and survive draining; only the latency
+        percentiles are limited to the results still held."""
+        return self.done.pop(uid)
+
+    def run_until_done(self, max_steps: int = 10_000) -> dict:
+        for _ in range(max_steps):
+            if not self.queue:
+                break
+            self.step()
+        return self.stats()
+
+    # -- accounting ----------------------------------------------------------
+
+    def _pctl(self, lats: List[float], q: float) -> float:
+        # nearest-rank percentile: ceil(q n) - 1, NOT int(q n) (which
+        # selects the max for any n <= 1/(1-q))
+        return lats[max(0, math.ceil(q * len(lats)) - 1)] if lats else 0.0
+
+    def stats(self, wall_s: Optional[float] = None) -> dict:
+        """Aggregate serving stats.  Counts, throughput, and avg/max
+        latency come from O(1) running totals, so they stay correct after
+        results are drained with :meth:`pop_result`; the latency
+        percentiles are computed over the results still held in ``done``.
+        Throughput is requests completed per second of batched compute
+        (``total_compute_s``) — pass ``wall_s`` to rate against an
+        externally measured wall instead (only meaningful when it spans
+        every completed request)."""
+        lats = sorted(r.latency_s for r in self.done.values())
+        wall = wall_s if wall_s is not None else self.total_compute_s
+        n = self.total_requests
+        return {
+            "requests": n,
+            "batches": self.total_batches,
+            "compiles": self.compile_count,
+            "buckets": {str(k): v
+                        for k, v in sorted(self.per_bucket.items())},
+            "wall_s": wall,
+            "images_per_s": n / max(wall, 1e-9),
+            "latency_avg_ms": 1e3 * self.total_latency_s / n if n else 0.0,
+            "latency_p50_ms": 1e3 * self._pctl(lats, 0.5),
+            "latency_p95_ms": 1e3 * self._pctl(lats, 0.95),
+            "latency_max_ms": 1e3 * self.max_latency_s,
+            "packed_mbytes": self.model.nbytes_packed() / 1e6,
+            "compression_x": round(self.model.compression_ratio(), 2),
+        }

@@ -50,10 +50,10 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import packing
 
 
-def _fused_conv_kernel(s_ref, w_ref, v_ref, o_ref, v_acc,
+def _fused_conv_kernel(s_ref, w_ref, th_ref, v_ref, o_ref, v_acc,
                        *, bits: int, kh: int, kw: int, cin_pad: int,
                        stride: int, ho: int, wo: int, n_out: int,
-                       leak_shift: int, threshold_q: int, v_reset_q: int,
+                       leak_shift: int, v_reset_q: int,
                        soft_reset: bool):
     t = pl.program_id(2)
 
@@ -97,17 +97,20 @@ def _fused_conv_kernel(s_ref, w_ref, v_ref, o_ref, v_acc,
         preferred_element_type=jnp.int32,
     )                                          # (Ho*Wo, bn)
 
-    # shift-add LIF update on the VMEM-resident membrane tile
+    # shift-add LIF update on the VMEM-resident membrane tile.  theta is
+    # a per-output-channel row vector (the per-channel threshold fold);
+    # it broadcasts over the (Ho*Wo) pixel rows of the tile.
+    theta = th_ref[...]                        # (1, bn)
     v = v_acc[...]
     v = v - (v >> leak_shift) + i_syn
-    spikes = (v >= threshold_q).astype(jnp.int32)
+    spikes = (v >= theta).astype(jnp.int32)
     # zero spikes of zero-padded output channels so packed words are
     # bit-identical to pack_bool of the unpadded reference
     col = pl.program_id(1) * v.shape[1] + jax.lax.broadcasted_iota(
         jnp.int32, v.shape, 1)
     spikes = jnp.where(col < n_out, spikes, 0)
     if soft_reset:
-        v = v - spikes * threshold_q
+        v = v - spikes * theta
     else:
         v = jnp.where(spikes == 1, jnp.int32(v_reset_q), v)
 
@@ -119,12 +122,13 @@ def _fused_conv_kernel(s_ref, w_ref, v_ref, o_ref, v_acc,
 @functools.partial(
     jax.jit,
     static_argnames=("bits", "kh", "kw", "cin_pad", "stride", "ho", "wo",
-                     "n_out", "leak_shift", "threshold_q", "v_reset_q",
+                     "n_out", "leak_shift", "v_reset_q",
                      "soft_reset", "bn", "interpret"),
 )
 def fused_conv_rollout_pallas(
     spikes_packed_t: jnp.ndarray,  # (T, B, Hp, Wp*wc) int32, pre-padded
     w_packed: jnp.ndarray,         # (n, kh*kw*cin_pad*bits/32) int32
+    theta_q: jnp.ndarray,          # (1, n) int32 per-channel thresholds
     *,
     bits: int,
     kh: int,
@@ -135,7 +139,6 @@ def fused_conv_rollout_pallas(
     wo: int,
     n_out: int,                    # true c_out (<= n); masks padded channels
     leak_shift: int,
-    threshold_q: int,
     v_reset_q: int = 0,
     soft_reset: bool = True,
     bn: int = 128,
@@ -159,12 +162,16 @@ def fused_conv_rollout_pallas(
     if bn % 32 or n % bn:
         raise ValueError("caller (ops.py) must pad c_out to bn multiples, "
                          "bn % 32 == 0")
+    if theta_q.shape != (1, n):
+        raise ValueError(
+            f"theta_q must be (1, {n}) per-channel thresholds, "
+            f"got {theta_q.shape} (caller ops.py must pad)")
     grid = (b, n // bn, t_steps)
     kernel = functools.partial(
         _fused_conv_kernel,
         bits=bits, kh=kh, kw=kw, cin_pad=cin_pad, stride=stride,
         ho=ho, wo=wo, n_out=n_out, leak_shift=leak_shift,
-        threshold_q=threshold_q, v_reset_q=v_reset_q, soft_reset=soft_reset,
+        v_reset_q=v_reset_q, soft_reset=soft_reset,
     )
     return pl.pallas_call(
         kernel,
@@ -172,6 +179,7 @@ def fused_conv_rollout_pallas(
         in_specs=[
             pl.BlockSpec((1, 1, hp, wpw), lambda i, j, t: (t, i, 0, 0)),
             pl.BlockSpec((bn, w_packed.shape[1]), lambda i, j, t: (j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, t: (0, j)),
         ],
         out_specs=[
             pl.BlockSpec((1, ho * wo, bn), lambda i, j, t: (i, 0, j)),
@@ -192,10 +200,11 @@ def fused_conv_rollout_pallas(
             bytes_accessed=(
                 (n // bn) * spikes_packed_t.size * 4  # planes, per cout tile
                 + b * w_packed.size * 4               # weights, per b
+                + b * n * 4                           # theta, per b
                 + b * ho * wo * n * 4                 # membrane out
                 + t_steps * b * ho * wo * n // 8),    # spikes out
 
             transcendentals=0,
         ),
         interpret=interpret,
-    )(spikes_packed_t, w_packed)
+    )(spikes_packed_t, w_packed, theta_q)

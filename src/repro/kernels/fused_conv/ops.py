@@ -21,6 +21,7 @@ from typing import Tuple
 import jax.numpy as jnp
 
 from repro.core import packing
+from repro.core.lif import as_theta_vector
 from repro.kernels import backend as _backend
 from repro.kernels.fused_conv import kernel as _kernel
 from repro.kernels.fused_conv import ref as _ref
@@ -45,6 +46,11 @@ def fused_conv_rollout(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """All T timesteps of one spiking conv layer in a single fused pass.
 
+    ``threshold_q`` is a scalar (legacy, broadcast to every channel) or a
+    per-output-channel int32 vector of length ``c_out`` — the per-channel
+    integer threshold fold (theta_q[c] ~ theta / scale[c]) that rides as
+    a row-vector operand on the kernel.
+
     Returns (v_T: (B, Ho, Wo, c_out) int32,
              out_spikes_packed: (T, B, Ho, Wo, ceil(c_out/32)) int32),
     bit-exact with the unfused `unpack -> int conv -> lif_step ->
@@ -58,11 +64,12 @@ def fused_conv_rollout(
     if qct.c_in_pad != win * 32:
         raise ValueError("quantize_conv cin_pad drifted from the spike "
                          "word layout — requantize the weights")
+    theta = as_theta_vector(threshold_q, qct.c_out)
 
     if _backend.get_backend() == "jnp":
         return _ref.fused_conv_rollout_ref(
             spikes_packed_t, qct, stride=stride, padding=padding,
-            leak_shift=leak_shift, threshold_q=threshold_q,
+            leak_shift=leak_shift, threshold_q=theta,
             v_reset_q=v_reset_q, soft_reset=soft_reset,
         )
 
@@ -88,12 +95,15 @@ def fused_conv_rollout(
     bn_eff = min(bn, _round_up(qct.c_out, 32))
     n_pad = _round_up(qct.c_out, bn_eff)
     wpk = jnp.pad(qct.data, ((0, n_pad - qct.c_out), (0, 0)))
+    # padded channels' theta value is irrelevant: their spikes are masked
+    # by n_out inside the kernel before the reset uses theta
+    thp = jnp.pad(theta[None, :], ((0, 0), (0, n_pad - qct.c_out)))
 
     v, out = _kernel.fused_conv_rollout_pallas(
-        sp, wpk,
+        sp, wpk, thp,
         bits=qct.bits, kh=qct.kh, kw=qct.kw, cin_pad=qct.c_in_pad,
         stride=stride, ho=ho, wo=wo, n_out=qct.c_out,
-        leak_shift=leak_shift, threshold_q=threshold_q,
+        leak_shift=leak_shift,
         v_reset_q=v_reset_q, soft_reset=soft_reset, bn=bn_eff,
         interpret=(_backend.get_backend() == "interpret"),
     )

@@ -43,8 +43,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import packing
 
 
-def _fused_nce_kernel(s_ref, w_ref, v_ref, o_ref, v_acc,
-                      *, bits: int, leak_shift: int, threshold_q: int,
+def _fused_nce_kernel(s_ref, w_ref, th_ref, v_ref, o_ref, v_acc,
+                      *, bits: int, leak_shift: int,
                       v_reset_q: int, soft_reset: bool, n_out: int):
     t = pl.program_id(2)
 
@@ -70,17 +70,20 @@ def _fused_nce_kernel(s_ref, w_ref, v_ref, o_ref, v_acc,
         preferred_element_type=jnp.int32,
     )
 
-    # shift-add LIF update on the VMEM-resident membrane tile
+    # shift-add LIF update on the VMEM-resident membrane tile.  theta is
+    # a per-output-channel row vector (the per-channel threshold fold);
+    # it broadcasts over the batch rows of the tile.
+    theta = th_ref[...]                        # (1, bn)
     v = v_acc[...]
     v = v - (v >> leak_shift) + i_syn
-    spikes = (v >= threshold_q).astype(jnp.int32)
+    spikes = (v >= theta).astype(jnp.int32)
     # zero spikes of zero-padded output neurons so packed words are
     # bit-identical to pack_bool of the unpadded reference
     col = pl.program_id(1) * v.shape[1] + jax.lax.broadcasted_iota(
         jnp.int32, v.shape, 1)
     spikes = jnp.where(col < n_out, spikes, 0)
     if soft_reset:
-        v = v - spikes * threshold_q
+        v = v - spikes * theta
     else:
         v = jnp.where(spikes == 1, jnp.int32(v_reset_q), v)
 
@@ -91,17 +94,17 @@ def _fused_nce_kernel(s_ref, w_ref, v_ref, o_ref, v_acc,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bits", "n_out", "leak_shift", "threshold_q",
+    static_argnames=("bits", "n_out", "leak_shift",
                      "v_reset_q", "soft_reset", "bm", "bn", "interpret"),
 )
 def fused_nce_rollout_pallas(
     spikes_packed_t: jnp.ndarray,  # (T, m, k/32) int32
     w_packed: jnp.ndarray,         # (n, k*bits/32) int32
+    theta_q: jnp.ndarray,          # (1, n) int32 per-channel thresholds
     *,
     bits: int,
     n_out: int,                    # true d_out (<= n); masks padded neurons
     leak_shift: int,
-    threshold_q: int,
     v_reset_q: int = 0,
     soft_reset: bool = True,
     bm: int = 8,
@@ -120,10 +123,14 @@ def fused_nce_rollout_pallas(
         raise ValueError(f"bn={bn} must be a multiple of 32 (spike word)")
     if m % bm or n % bn:
         raise ValueError("caller (ops.py) must pad to tile multiples")
+    if theta_q.shape != (1, n):
+        raise ValueError(
+            f"theta_q must be (1, {n}) per-channel thresholds, "
+            f"got {theta_q.shape} (caller ops.py must pad)")
     grid = (m // bm, n // bn, t_steps)
     kernel = functools.partial(
         _fused_nce_kernel,
-        bits=bits, leak_shift=leak_shift, threshold_q=threshold_q,
+        bits=bits, leak_shift=leak_shift,
         v_reset_q=v_reset_q, soft_reset=soft_reset, n_out=n_out,
     )
     return pl.pallas_call(
@@ -132,6 +139,7 @@ def fused_nce_rollout_pallas(
         in_specs=[
             pl.BlockSpec((1, bm, win), lambda i, j, t: (t, i, 0)),
             pl.BlockSpec((bn, w_packed.shape[1]), lambda i, j, t: (j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, t: (0, j)),
         ],
         out_specs=[
             pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
@@ -151,9 +159,10 @@ def fused_nce_rollout_pallas(
             bytes_accessed=(
                 (n // bn) * spikes_packed_t.size * 4  # spikes, per col tile
                 + (m // bm) * w_packed.size * 4       # weights, per row tile
+                + (m // bm) * n * 4                   # theta, per row tile
                 + m * n * 4                           # membrane out
                 + t_steps * m * n // 8),              # packed spikes out
             transcendentals=0,
         ),
         interpret=interpret,
-    )(spikes_packed_t, w_packed)
+    )(spikes_packed_t, w_packed, theta_q)

@@ -19,6 +19,7 @@ from typing import Tuple
 import jax.numpy as jnp
 
 from repro.core import packing
+from repro.core.lif import as_theta_vector
 from repro.kernels import backend as _backend
 from repro.kernels.fused_nce import kernel as _kernel
 from repro.kernels.fused_nce import ref as _ref
@@ -50,20 +51,26 @@ def fused_nce_rollout(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """All T timesteps of one NCE layer in a single fused pass.
 
+    ``threshold_q`` is a scalar (legacy, broadcast to every neuron) or a
+    per-output-channel int32 vector of length ``d_out`` — the per-channel
+    integer threshold fold (theta_q[c] ~ theta / scale[c]) that rides as
+    a row-vector operand on the kernel.
+
     Returns (v_T: (B, d_out) int32,
              out_spikes_packed: (T, B, ceil(d_out/32)) int32), bit-exact
     with the unfused `spike_matmul -> lif_step -> pack_bool` chain.
     """
+    n = qt.shape[0]
+    theta = as_theta_vector(threshold_q, n)
     be = _backend.get_backend()
     if be == "jnp":
         return _ref.fused_nce_rollout_ref(
             spikes_packed_t, qt, d_in=d_in, leak_shift=leak_shift,
-            threshold_q=threshold_q, v_reset_q=v_reset_q,
+            threshold_q=theta, v_reset_q=v_reset_q,
             soft_reset=soft_reset,
         )
 
     t_steps, b, _ = spikes_packed_t.shape
-    n = qt.shape[0]
     if t_steps == 0:  # degenerate rollout: match lax.scan's empty-ys result
         return (jnp.zeros((b, n), jnp.int32),
                 jnp.zeros((0, b, packing.packed_last_dim(n, 1)), jnp.int32))
@@ -72,10 +79,13 @@ def fused_nce_rollout(
     # k/vpw_w — padded spike words are zero, so the extra columns are inert
     sp = _pad_axis(_pad_axis(spikes_packed_t, 1, bm), 2, _K_ALIGN // 32)
     wp = _pad_axis(_pad_axis(qt.data, 0, bn), 1, _K_ALIGN // vpw_w)
+    # padded neurons' theta value is irrelevant: their spikes are masked
+    # by n_out inside the kernel before the reset uses theta
+    thp = _pad_axis(theta[None, :], 1, bn)
     v, out = _kernel.fused_nce_rollout_pallas(
-        sp, wp,
+        sp, wp, thp,
         bits=qt.bits, n_out=n, leak_shift=leak_shift,
-        threshold_q=threshold_q, v_reset_q=v_reset_q,
+        v_reset_q=v_reset_q,
         soft_reset=soft_reset, bm=bm, bn=bn,
         interpret=(be == "interpret"),
     )

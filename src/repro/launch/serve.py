@@ -6,9 +6,11 @@ import argparse
 
 
 def main():
+    from repro.configs import add_geometry_flags
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
-    ap.add_argument("--smoke", action="store_true", default=True)
+    add_geometry_flags(ap)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)

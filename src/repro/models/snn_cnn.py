@@ -119,7 +119,7 @@ def _record_rate(rates, x):
 
 
 def vgg_apply(params, cfg: SNNConfig, images: jnp.ndarray,
-              _rates=None) -> jnp.ndarray:
+              _rates=None, package=None) -> jnp.ndarray:
     """images: (B, H, W, C) in [0,1].  Returns logits (B, n_classes).
 
     With ``cfg.int_deploy`` every layer past the first conv runs on the
@@ -128,7 +128,15 @@ def vgg_apply(params, cfg: SNNConfig, images: jnp.ndarray,
     its binary output spikes feed packed-conv rollouts from there on.
     Pools become spike-preserving max pools (an OR for {0,1} planes) so
     the inter-layer traffic stays 1-bit packable.
+
+    ``package`` (a ``repro.deploy.DeployedModel``) supplies pre-packed
+    weights + folded per-channel thresholds for every integer layer, so
+    the hot path runs zero quantization; without it each integer layer
+    re-quantizes its float params per call.  Bit-exact either way.
     """
+    if package is not None and not cfg.int_path:
+        raise ValueError("a deploy package drives the integer path only "
+                         "(cfg needs int_deploy + quantized)")
     pc = cfg.precision if cfg.precision.quantized else None
     x = jnp.broadcast_to(images, (cfg.timesteps, *images.shape))
     ci = 0
@@ -137,8 +145,14 @@ def vgg_apply(params, cfg: SNNConfig, images: jnp.ndarray,
             x = maxpool_t(x) if cfg.int_path else avgpool_t(x)
         else:
             if cfg.int_path and ci > 0:
-                x = spiking_conv_int_apply(params["convs"][ci], x, cfg.lif,
-                                           cfg.precision)
+                if package is not None:
+                    lp = package.layers[f"convs.{ci}"]
+                    x = spiking_conv_int_apply(None, x, cfg.lif,
+                                               cfg.precision, qct=lp.qt,
+                                               threshold_q=lp.theta_q)
+                else:
+                    x = spiking_conv_int_apply(params["convs"][ci], x,
+                                               cfg.lif, cfg.precision)
             else:
                 x = spiking_conv_apply(params["convs"][ci], x, cfg.lif, pc)
                 if cfg.int_path:
@@ -148,7 +162,13 @@ def vgg_apply(params, cfg: SNNConfig, images: jnp.ndarray,
     T, B = x.shape[0], x.shape[1]
     x = x.reshape(T, B, -1)
     if cfg.int_path:
-        x = spiking_dense_int_apply(params["fc1"], x, cfg.lif, cfg.precision)
+        if package is not None:
+            lp = package.layers["fc1"]
+            x = spiking_dense_int_apply(None, x, cfg.lif, cfg.precision,
+                                        qt=lp.qt, threshold_q=lp.theta_q)
+        else:
+            x = spiking_dense_int_apply(params["fc1"], x, cfg.lif,
+                                        cfg.precision)
     else:
         x = spiking_dense_apply(params["fc1"], x, cfg.lif, pc)
     _record_rate(_rates, x)
@@ -182,8 +202,36 @@ def resnet_init(key, cfg: SNNConfig):
     return params
 
 
+def _int_block_convs(params, package):
+    """Per-residual-block operands for the fused integer path: yields
+    (conv1, conv2, proj-or-None) kwarg dicts for
+    ``spiking_conv_int_apply``, resolved from the deploy package
+    (pre-packed weights + thresholds) or from the float params (per-call
+    quantization) — so one block loop in :func:`resnet_apply` serves
+    both, keeping the two paths bit-identical by construction."""
+    if package is None:
+        for blk in params["blocks"]:
+            s = blk["stride"]
+            yield (dict(params=blk["conv1"], stride=s),
+                   dict(params=blk["conv2"]),
+                   dict(params=blk["proj"], stride=s)
+                   if "proj" in blk else None)
+        return
+    bi = 0
+    while f"blocks.{bi}.conv1" in package.layers:
+        lp1 = package.layers[f"blocks.{bi}.conv1"]
+        lp2 = package.layers[f"blocks.{bi}.conv2"]
+        lpp = package.layers.get(f"blocks.{bi}.proj")
+        yield (dict(params=None, stride=lp1.stride, qct=lp1.qt,
+                    threshold_q=lp1.theta_q),
+               dict(params=None, qct=lp2.qt, threshold_q=lp2.theta_q),
+               dict(params=None, stride=lpp.stride, qct=lpp.qt,
+                    threshold_q=lpp.theta_q) if lpp is not None else None)
+        bi += 1
+
+
 def resnet_apply(params, cfg: SNNConfig, images: jnp.ndarray,
-                 _rates=None) -> jnp.ndarray:
+                 _rates=None, package=None) -> jnp.ndarray:
     """With ``cfg.int_deploy`` the stem stays on the float twin (its
     input is direct-encoded analog current) and every residual block —
     both 3x3 convs, strides and the 1x1 projection shortcuts — runs the
@@ -191,26 +239,35 @@ def resnet_apply(params, cfg: SNNConfig, images: jnp.ndarray,
     (``maximum`` of {0,1} planes) so the block output stays 1-bit
     packable; the float path's rate-preserving ``(h + sc) * 0.5`` would
     emit fractional events no packed datapath can carry.
+
+    ``package`` (a ``repro.deploy.DeployedModel``) supplies pre-packed
+    weights + folded per-channel thresholds for every block conv, so the
+    hot path runs zero quantization.  Bit-exact with the per-call path.
     """
+    if package is not None and not cfg.int_path:
+        raise ValueError("a deploy package drives the integer path only "
+                         "(cfg needs int_deploy + quantized)")
     pc = cfg.precision if cfg.precision.quantized else None
     x = jnp.broadcast_to(images, (cfg.timesteps, *images.shape))
     x = spiking_conv_apply(params["stem"], x, cfg.lif, pc)
     if cfg.int_path:
         x = x.astype(jnp.int32)
     _record_rate(_rates, x)
-    for blk in params["blocks"]:
-        s = blk["stride"]
-        if cfg.int_path:
-            h = spiking_conv_int_apply(blk["conv1"], x, cfg.lif,
-                                       cfg.precision, stride=s)
-            h = spiking_conv_int_apply(blk["conv2"], h, cfg.lif,
-                                       cfg.precision)
+    if cfg.int_path:
+        for c1, c2, cp in _int_block_convs(params, package):
+            h = spiking_conv_int_apply(c1.pop("params"), x, cfg.lif,
+                                       cfg.precision, **c1)
+            h = spiking_conv_int_apply(c2.pop("params"), h, cfg.lif,
+                                       cfg.precision, **c2)
             sc = x
-            if "proj" in blk:
-                sc = spiking_conv_int_apply(blk["proj"], x, cfg.lif,
-                                            cfg.precision, stride=s)
+            if cp is not None:
+                sc = spiking_conv_int_apply(cp.pop("params"), x, cfg.lif,
+                                            cfg.precision, **cp)
             x = jnp.maximum(h, sc)   # spike OR: binary-preserving merge
-        else:
+            _record_rate(_rates, x)
+    else:
+        for blk in params["blocks"]:
+            s = blk["stride"]
             h = spiking_conv_apply(blk["conv1"], x, cfg.lif, pc, stride=s)
             h = spiking_conv_apply(blk["conv2"], h, cfg.lif, pc)
             sc = x
@@ -218,7 +275,7 @@ def resnet_apply(params, cfg: SNNConfig, images: jnp.ndarray,
                 sc = spiking_conv_apply(blk["proj"], x, cfg.lif, pc,
                                         stride=s)
             x = (h + sc) * 0.5   # spike-rate-preserving residual merge
-        _record_rate(_rates, x)
+            _record_rate(_rates, x)
     x = jnp.mean(x, axis=(2, 3))            # (T, B, C) global avg pool
     return readout_apply(params["head"], x)
 
@@ -292,18 +349,22 @@ def calibrate(params, cfg: SNNConfig, images):
     return params
 
 
-def apply(params, cfg: SNNConfig, images):
+def apply(params, cfg: SNNConfig, images, package=None):
+    """Forward.  With ``package`` (repro.deploy.DeployedModel) the integer
+    layers consume pre-packed weights + folded thresholds — the zero-
+    quantization serving path; ``params`` then only needs the float
+    stem/head leaves (``package.float_params``)."""
     return (resnet_apply if cfg.model == "resnet18" else vgg_apply)(
-        params, cfg, images)
+        params, cfg, images, package=package)
 
 
-def apply_with_rates(params, cfg: SNNConfig, images):
+def apply_with_rates(params, cfg: SNNConfig, images, package=None):
     """Forward pass that also reports per-spiking-layer mean firing rates
     (eager-only instrumentation — used to compare the float and integer
     deployment paths' spike activity)."""
     rates = []
     logits = (resnet_apply if cfg.model == "resnet18" else vgg_apply)(
-        params, cfg, images, _rates=rates)
+        params, cfg, images, _rates=rates, package=package)
     return logits, rates
 
 

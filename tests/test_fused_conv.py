@@ -150,8 +150,9 @@ def test_spiking_conv_int_apply_matches_rollout():
 
 
 def test_spiking_conv_int_apply_jit_contract():
-    """Explicit threshold_q works under jit; the auto-fold raises the
-    documented error instead of a raw ConcretizationTypeError."""
+    """Explicit threshold_q works under jit, and the per-channel auto-fold
+    is traced-friendly: theta_q rides as an array operand on the fused
+    kernel, so jit and eager agree bit for bit."""
     from repro.core.snn_layers import conv_init, spiking_conv_int_apply
 
     params = conv_init(jax.random.PRNGKey(2), 4, 8)
@@ -162,12 +163,12 @@ def test_spiking_conv_int_apply_jit_contract():
     out = jax.jit(lambda p, s: spiking_conv_int_apply(
         p, s, lif, pc, threshold_q=16))(params, sp)
     assert out.shape == (2, 1, 6, 6, 8)
-    with pytest.raises(ValueError, match="threshold_q must be passed"):
-        jax.jit(lambda p, s: spiking_conv_int_apply(
-            p, s, lif, pc))(params, sp)
-    # eager auto-fold still works
-    out2 = spiking_conv_int_apply(params, sp, lif, pc)
-    assert out2.shape == (2, 1, 6, 6, 8)
+    # the auto-fold works under jit (per-channel theta is an operand, not
+    # a static scalar) and matches the eager fold exactly
+    out_jit = jax.jit(lambda p, s: spiking_conv_int_apply(
+        p, s, lif, pc))(params, sp)
+    out_eager = spiking_conv_int_apply(params, sp, lif, pc)
+    np.testing.assert_array_equal(np.asarray(out_jit), np.asarray(out_eager))
 
 
 def test_int_conv_rate_tracks_float_path():

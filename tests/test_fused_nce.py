@@ -128,8 +128,9 @@ def test_spiking_dense_int_apply_matches_engine():
 
 
 def test_spiking_dense_int_apply_jit_contract():
-    """Explicit threshold_q works under jit; the auto-fold raises the
-    documented error instead of a raw ConcretizationTypeError."""
+    """Explicit threshold_q works under jit, and the per-channel auto-fold
+    is traced-friendly: theta_q rides as an array operand on the fused
+    kernel, so jit and eager agree bit for bit."""
     from repro.core.lif import LIFConfig
     from repro.core.snn_layers import dense_init, spiking_dense_int_apply
 
@@ -140,12 +141,12 @@ def test_spiking_dense_int_apply_jit_contract():
     out = jax.jit(lambda p, s: spiking_dense_int_apply(
         p, s, lif, pc, threshold_q=16))(params, sp)
     assert out.shape == (2, 2, 32)
-    with pytest.raises(ValueError, match="threshold_q must be passed"):
-        jax.jit(lambda p, s: spiking_dense_int_apply(
-            p, s, lif, pc))(params, sp)
-    # eager auto-fold still works
-    out2 = spiking_dense_int_apply(params, sp, lif, pc)
-    assert out2.shape == (2, 2, 32)
+    # the auto-fold works under jit (per-channel theta is an operand, not
+    # a static scalar) and matches the eager fold exactly
+    out_jit = jax.jit(lambda p, s: spiking_dense_int_apply(
+        p, s, lif, pc))(params, sp)
+    out_eager = spiking_dense_int_apply(params, sp, lif, pc)
+    np.testing.assert_array_equal(np.asarray(out_jit), np.asarray(out_eager))
 
 
 @settings(max_examples=12, deadline=None)
