@@ -1,13 +1,34 @@
 """Paper Figs. 4 & 5 — accuracy vs memory footprint vs precision.
 
 Trains the SNN (reduced VGG) on the deterministic synthetic vision task at
-FP32 / INT8 / INT4 / INT2 (QAT fake-quant in the training graph, exact
-packed PTQ for the deployed footprint) and reports:
+FP32 / INT8 / INT4 / INT2 (QAT fake-quant in the training graph) and
+reports:
 
   Fig.5 axis: accuracy per precision  (claim: INT8 ~ FP32, graceful
               INT4/INT2 degradation)
   Fig.4 axis: packed memory footprint per precision (claim: ~bits/32 of
               FP32, i.e. 4x/8x/16x reduction)
+
+Deployment path (graph API): each per-channel quantized row is lowered
+through ``repro.deploy.deploy`` ONCE — the same declarative model graph
+the training forward ran, packed to the integer datapath.  The Fig.4
+memory axis and the reported deployed-datapath accuracy both come from
+the :class:`DeployedModel`, so they run ZERO per-batch quantization (the
+pre-graph version of this benchmark re-quantized every weight leaf by
+hand for the footprint), and each row asserts the packaged forward is
+bit-exact with the per-call ``int_deploy`` forward — the graph-parity
+guard CI's graph-smoke leg relies on.  The gap between QAT and deployed
+accuracy is the ROADMAP's "training-aware int deployment" item (the
+integer path's max-pool/OR-merge ops are never seen in training).
+
+The INT2-g32 row keeps the QAT/fake-quant evaluation: the fused integer
+datapath folds exactly one scale per output channel into its threshold,
+so grouped scales cannot lower to it (quantize_conv rejects them) — the
+row exists for the Fig.4 finer-scales trade-off only.
+
+Run:  PYTHONPATH=src python -m benchmarks.fig45_quantization [--quick|--smoke]
+(module form — the benchmarks.bench_lib import needs the repo root on
+sys.path; benchmarks.run invokes the same ``run()``.)
 """
 
 from __future__ import annotations
@@ -20,9 +41,9 @@ import numpy as np
 
 from benchmarks.bench_lib import emit
 from repro.data import synthetic
+from repro.deploy import deploy
 from repro.models import snn_cnn
 from repro.quant import PrecisionConfig, quantize
-from repro.quant.formats import QuantizedTensor
 
 
 def _ce(params, cfg, x, y):
@@ -31,53 +52,62 @@ def _ce(params, cfg, x, y):
     return jnp.mean(lse - jnp.take_along_axis(logits, y[:, None], 1)[:, 0])
 
 
-def _acc(params, cfg, x, y, bs=64):
+def _acc(fwd, x, y, bs=64):
     correct = 0
     for i in range(0, len(x), bs):
-        logits = snn_cnn.apply(params, cfg, jnp.asarray(x[i:i + bs]))
+        logits = fwd(jnp.asarray(x[i:i + bs]))
         correct += int(jnp.sum(jnp.argmax(logits, -1) ==
                                jnp.asarray(y[i:i + bs])))
     return correct / len(x)
 
 
-def _packed_bytes(params, bits: int, gs: int = -1) -> int:
-    """Exact packed footprint of all weights at the given precision."""
+def _float_bytes(params) -> int:
+    return sum(leaf.size * 4 for leaf in jax.tree.leaves(params)
+               if hasattr(leaf, "size"))
+
+
+def _packed_bytes_fq(params, bits: int, gs: int) -> int:
+    """Footprint of the fake-quant (non-lowerable) grouped row: per-leaf
+    packed size at the given precision, float vectors kept fp32."""
     total = 0
     for leaf in jax.tree.leaves(params):
-        if leaf.ndim < 2:
-            total += leaf.size * 4
+        if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+            total += 4 if not hasattr(leaf, "size") else leaf.size * 4
             continue
-        if bits == 32:
-            total += leaf.size * 4
-        else:
-            w2 = leaf.reshape(-1, leaf.shape[-1]).T  # (out, in)
-            g = gs if gs != -1 and w2.shape[-1] % gs == 0 else -1
-            qt = quantize(w2, PrecisionConfig(bits=bits, group_size=g))
-            total += qt.nbytes_packed()
+        w2 = leaf.reshape(-1, leaf.shape[-1]).T  # (out, in)
+        g = gs if gs != -1 and w2.shape[-1] % gs == 0 else -1
+        qt = quantize(w2, PrecisionConfig(bits=bits, group_size=g))
+        total += qt.nbytes_packed()
     return total
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, smoke: bool = False):
     print("# --- Fig.4/5: precision vs accuracy vs memory ---")
     from repro.core.lif import LIFConfig
     from repro.train import optimizer as opt
 
-    steps = 100 if quick else 300
+    steps = 30 if smoke else (100 if quick else 300)
+    n_train = 512 if smoke else (1024 if quick else 2048)
+    n_test = 128 if smoke else 256
     cfg0 = snn_cnn.SNNConfig(model="vgg9", img_size=16, timesteps=3,
                              scale=0.25, n_classes=10,
                              lif=LIFConfig(leak_shift=3, threshold=0.5))
     # noise=2.0 places FP32 at ~99% with headroom below — the regime where
     # the paper's INT8~FP32 / graceful INT4/INT2 claim is observable
     (x_tr, y_tr), (x_te, y_te) = synthetic.make_vision_dataset(
-        n_classes=10, img_size=16, n_train=1024 if quick else 2048,
-        n_test=256, noise=2.0)
+        n_classes=10, img_size=16, n_train=n_train, n_test=n_test, noise=2.0)
     ocfg = opt.OptConfig(lr=1e-3, warmup_steps=10, total_steps=steps,
                          weight_decay=0.0, clip_norm=5.0)
 
     results = {}
-    # (label, bits, group_size): per-channel rows reproduce Fig.5; the
-    # grouped INT2 row adds the Fig.4 trade-off point (finer scales buy
-    # accuracy for ~6% more memory)
+    fq_mem = {}   # like-for-like per-leaf footprints for the group-size
+    #               trade-off line (the deployed-package footprint keeps
+    #               the stem/head fp32, so it can't be compared against
+    #               the non-lowerable grouped row's accounting)
+    # (label, bits, group_size): per-channel rows reproduce Fig.5 and
+    # lower to the packed integer datapath; the grouped INT2 row adds the
+    # Fig.4 trade-off point (finer scales buy accuracy for ~6% more
+    # memory) but stays on the fake-quant eval — see module docstring
     sweep = [("FP32", 32, -1), ("INT8", 8, -1), ("INT4", 4, -1),
              ("INT2", 2, -1), ("INT2-g32", 2, 32)]
     for label, bits, gs in sweep:
@@ -100,13 +130,45 @@ def run(quick: bool = False):
             params, state, loss = step(params, state,
                                        jnp.asarray(x_tr[j:j + bs]),
                                        jnp.asarray(y_tr[j:j + bs]))
-        acc = _acc(params, cfg, x_te, y_te)
-        mem = _packed_bytes(params, bits, gs)
+
+        # Fig.5 axis: the QAT forward the row was trained with
+        acc = _acc(jax.jit(lambda xb: snn_cnn.apply(params, cfg, xb)),
+                   x_te, y_te)
+
+        deployable = bits != 32 and gs == -1
+        if deployable:
+            # Fig.4 axis + deployed column: lower the trained graph to
+            # the integer datapath ONCE via deploy(); footprint and the
+            # deployed eval run zero per-batch quantization, and the
+            # packaged forward must match the per-call path bit for bit
+            # (the graph-parity guard CI's graph-smoke leg relies on)
+            int_cfg = dataclasses.replace(cfg, int_deploy=True)
+            model = deploy(params, int_cfg)
+            xb = jnp.asarray(x_te[:16])
+            percall = snn_cnn.apply(params, int_cfg, xb)
+            packaged = model.apply(xb)
+            np.testing.assert_array_equal(
+                np.asarray(packaged), np.asarray(percall),
+                err_msg=f"{label}: packaged forward desyncs per-call path")
+            int_acc = _acc(jax.jit(model.apply), x_te, y_te)
+            mem = model.nbytes_packed() + _float_bytes(model.float_params)
+            if bits == 2:
+                fq_mem[label] = _packed_bytes_fq(params, bits, gs)
+            extra = (f";deployed_acc_pct={int_acc * 100:.1f}"
+                     f";packed_layers={len(model.layers)}")
+            deployed_col = f"  deployed acc={int_acc*100:5.1f}%"
+        elif bits == 32:
+            mem = _float_bytes(params)
+            extra, deployed_col = "", ""
+        else:   # grouped scales cannot lower to the fused datapath
+            mem = _packed_bytes_fq(params, bits, gs)
+            fq_mem[label] = mem
+            extra, deployed_col = "", ""
         results[label] = (acc, mem)
         emit(f"fig45/{label.lower()}_accuracy_pct", acc * 100,
-             f"packed_bytes={mem};steps={steps}")
+             f"packed_bytes={mem};steps={steps}{extra}")
         print(f"{label:8s} acc={acc*100:5.1f}%  packed weights="
-              f"{mem/1e6:.2f} MB")
+              f"{mem/1e6:.2f} MB{deployed_col}")
 
     fp32_acc, fp32_mem = results["FP32"]
     print("\nclaims under test:")
@@ -119,7 +181,20 @@ def run(quick: bool = False):
     print(f"  graceful degradation: INT4 {results['INT4'][0]*100:.1f}%, "
           f"INT2 {results['INT2'][0]*100:.1f}%")
     d = 100 * (results['INT2-g32'][0] - results['INT2'][0])
-    m = 100 * (results['INT2-g32'][1] / results['INT2'][1] - 1)
+    # like-for-like accounting (same per-leaf scheme for both rows)
+    m = 100 * (fq_mem['INT2-g32'] / fq_mem['INT2'] - 1)
     print(f"  INT2 group-32 scales: {results['INT2-g32'][0]*100:.1f}% "
-          f"({d:+.1f} pts for +{m:.0f}% memory — finer scales help PTQ "
+          f"({d:+.1f} pts for {m:+.0f}% memory — finer scales help PTQ "
           f"error but add STE noise under QAT)")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced step/data budget")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI geometry: smallest budget that still trains")
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke)

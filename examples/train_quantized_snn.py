@@ -1,8 +1,16 @@
 """Train the paper's VGG-16 SNN (reduced) at a chosen precision with
-surrogate-gradient BPTT + threshold balancing, then deploy it through the
-exact packed integer pipeline.
+surrogate-gradient BPTT + threshold balancing, then deploy the SAME model
+graph through the one-shot packed integer pipeline.
+
+The declarative graph API (repro.graph) means the architecture is defined
+once: training lowers it with the float/BPTT executor, and deployment
+lowers it with ``repro.deploy.deploy`` — a single pack of every post-stem
+layer (weights + folded per-channel thresholds) whose forward is
+bit-exact with the per-call integer path (asserted below; CI's
+graph-smoke leg runs this script end to end).
 
 Run:  PYTHONPATH=src python examples/train_quantized_snn.py [--bits 4]
+      (--smoke shrinks steps/geometry to CI size)
 """
 
 import argparse
@@ -11,30 +19,38 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.lif import LIFConfig
 from repro.data import synthetic
+from repro.deploy import deploy
 from repro.models import snn_cnn
-from repro.quant import PrecisionConfig, quantize
+from repro.quant import PrecisionConfig
 from repro.train import optimizer as opt
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--bits", type=int, default=4, choices=(2, 4, 8, 16))
 ap.add_argument("--steps", type=int, default=120)
+ap.add_argument("--smoke", action="store_true",
+                help="CI geometry: few steps, tiny model")
 args = ap.parse_args()
 
+steps = 12 if args.smoke else args.steps
 pc = PrecisionConfig(bits=args.bits, group_size=-1) if args.bits != 16 \
     else PrecisionConfig(bits=16)
-cfg = snn_cnn.SNNConfig(model="vgg16", img_size=16, timesteps=3, scale=0.25,
+cfg = snn_cnn.SNNConfig(model="vgg16", img_size=16, timesteps=3,
+                        scale=0.15 if args.smoke else 0.25,
                         n_classes=10, precision=pc,
                         lif=LIFConfig(leak_shift=3, threshold=0.5))
+print(cfg.graph().summary())   # the one topology every lowering shares
 (x_tr, y_tr), (x_te, y_te) = synthetic.make_vision_dataset(
-    n_classes=10, img_size=16, n_train=1024, n_test=256)
+    n_classes=10, img_size=16, n_train=256 if args.smoke else 1024,
+    n_test=64 if args.smoke else 256)
 
 params = snn_cnn.init(jax.random.PRNGKey(0), cfg)
 params = snn_cnn.calibrate(params, cfg, jnp.asarray(x_tr[:32]))
 state = opt.init(params)
-ocfg = opt.OptConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps,
+ocfg = opt.OptConfig(lr=1e-3, warmup_steps=10, total_steps=steps,
                      weight_decay=0.0, clip_norm=5.0)
 
 
@@ -52,7 +68,7 @@ def step(params, state, x, y):
 
 
 t0 = time.time()
-for i in range(args.steps):
+for i in range(steps):
     j = (i * 64) % (len(x_tr) - 64)
     params, state, loss = step(params, state, jnp.asarray(x_tr[j:j + 64]),
                                jnp.asarray(y_tr[j:j + 64]))
@@ -62,13 +78,31 @@ for i in range(args.steps):
 
 logits = snn_cnn.apply(params, cfg, jnp.asarray(x_te))
 acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y_te)))
-print(f"\nW{args.bits} test accuracy: {acc*100:.1f}%")
+print(f"\nW{args.bits} (QAT forward) test accuracy: {acc*100:.1f}%")
 
-# deployment: pack the first conv's weights into the integer engine format
-w0 = params["convs"][0]["w"]
-k1, k2, ci, co = w0.shape
-qt = quantize(w0.transpose(3, 0, 1, 2).reshape(co, -1),
-              PrecisionConfig(bits=args.bits if args.bits != 16 else 8))
-print(f"deployed conv0: {qt.data.shape} int32 words "
-      f"({qt.compression_ratio():.1f}x vs fp32) — ready for the NCE "
-      f"spike_matmul kernel")
+# deployment: lower the SAME graph to the packed integer datapath, once.
+# bits=16 trains unquantized; deploy it at INT8 (PTQ).
+deploy_bits = args.bits if args.bits != 16 else 8
+int_cfg = dataclasses.replace(cfg, int_deploy=True,
+                              precision=PrecisionConfig(bits=deploy_bits))
+t0 = time.time()
+model = deploy(params, int_cfg)
+print(f"deployed W{deploy_bits} in {time.time()-t0:.2f}s: "
+      f"{len(model.layers)} packed layers, "
+      f"{model.nbytes_packed()/1e6:.3f} MB "
+      f"({model.compression_ratio():.1f}x vs fp32)")
+
+# the packaged forward must be bit-exact with the per-call integer path —
+# the graph-parity contract CI's graph-smoke leg enforces
+xb = jnp.asarray(x_te[:32])
+percall = snn_cnn.apply(params, int_cfg, xb)
+packaged = model.apply(xb)
+np.testing.assert_array_equal(
+    np.asarray(packaged), np.asarray(percall),
+    err_msg="packaged forward desyncs the per-call integer path")
+print("packaged forward == per-call integer forward (bit-exact)")
+
+int_logits = model.apply(jnp.asarray(x_te))
+int_acc = float(jnp.mean(jnp.argmax(int_logits, -1) == jnp.asarray(y_te)))
+print(f"deployed INT{deploy_bits} test accuracy: {int_acc*100:.1f}% "
+      f"(packed integer datapath, zero per-call quantization)")

@@ -7,6 +7,10 @@ NCE (core/nce.py) with packed weights — ``spiking_dense_int_apply``
 runs the whole T-step layer through the fused NCE rollout kernel
 (kernels/fused_nce), the deployment twin of ``spiking_dense_apply``.
 
+These are the per-layer primitives the graph executors
+(repro.graph.executors) lower ModelGraph nodes onto; model topology
+lives in the graph, never here.
+
 Layout convention: time axis first — activations are (T, B, ...).
 """
 

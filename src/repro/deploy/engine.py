@@ -6,7 +6,10 @@ vector out after T timesteps), so there is no KV state to keep live —
 the scheduling problem collapses to micro-batching.  The engine pulls up
 to ``max_batch`` queued requests per step, pads them to the smallest
 configured batch **bucket**, and runs one jit-compiled forward of the
-:class:`~repro.deploy.package.DeployedModel` per bucket shape.
+:class:`~repro.deploy.package.DeployedModel` per bucket shape (the
+packaged-executor lowering of the model graph —
+``repro.graph.PackagedExecutor``; the engine itself never touches the
+quantizer or the topology).
 
 Buckets are the latency/compile trade: XLA specializes on the batch
 dimension, so serving raw ragged batch sizes would recompile on every

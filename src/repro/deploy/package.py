@@ -1,8 +1,9 @@
 """One-shot model packing for the SNN deployment runtime.
 
 The training checkpoint is a float pytree; the integer forward only needs
-the packed L-SPINE operands.  :func:`deploy` walks the model pytree
-ONCE, quantizes + packs every post-stem conv/dense layer
+the packed L-SPINE operands.  :func:`deploy` traverses the declarative
+model graph (repro.graph) ONCE, quantizes + packs every post-stem
+conv/dense layer
 (``QuantizedConvTensor`` / ``QuantizedTensor``), folds the float firing
 threshold into a per-channel integer ``theta_q`` vector, and records the
 per-layer geometry — so the hot serving path never touches the
@@ -237,15 +238,20 @@ def _pack_dense(p, pc: PrecisionConfig, lif: LIFConfig) -> PackedLayer:
 def deploy(params, cfg) -> DeployedModel:
     """Pack a float SNN checkpoint for integer deployment, in one pass.
 
-    Walks the model structure once: every layer the ``int_deploy``
-    forward routes through the fused packed kernels is quantized
+    Traverses the declarative model graph (``repro.graph.build_graph``)
+    once: every spec the integer executor routes through the fused
+    packed kernels (``graph.packable_specs()`` — post-stem convs,
+    residual-block convs + projections, the FC head) is quantized
     (threshold-balancing gain folded into the weights first, exactly as
     the per-call path does), packed, and gets its per-channel integer
     threshold vector.  The direct-encoded stem and the readout head stay
-    float (their activations are not 1-bit).  The result drives a
-    forward that is bit-exact with the per-call ``int_deploy`` path.
+    float (their activations are not 1-bit).  Because the pack walk and
+    the forwards share one graph, a topology edit cannot desync them —
+    the result drives a forward that is bit-exact with the per-call
+    ``int_deploy`` path.
     """
-    from repro.models.snn_cnn import _base_plan, effective_plan
+    from repro.graph import build_graph
+    from repro.graph.spec import Conv, Dense, get_path, set_path
 
     if not cfg.int_path:
         raise ValueError(
@@ -256,27 +262,19 @@ def deploy(params, cfg) -> DeployedModel:
             "deploy(): the integer threshold fold assumes symmetric "
             "quantization (a zero point cannot fold into theta_q)")
     pc, lif = cfg.precision, cfg.lif
+    graph = build_graph(cfg)
     layers: Dict[str, PackedLayer] = {}
-
-    if cfg.model == "resnet18":
-        float_params = {"stem": dict(params["stem"]),
-                        "head": dict(params["head"])}
-        for bi, blk in enumerate(params["blocks"]):
-            s = blk["stride"]
-            layers[f"blocks.{bi}.conv1"] = _pack_conv(blk["conv1"], pc, lif,
-                                                      stride=s)
-            layers[f"blocks.{bi}.conv2"] = _pack_conv(blk["conv2"], pc, lif)
-            if "proj" in blk:
-                layers[f"blocks.{bi}.proj"] = _pack_conv(blk["proj"], pc,
-                                                         lif, stride=s)
-    else:
-        plan = effective_plan(cfg.img_size, _base_plan(cfg))
-        n_convs = sum(1 for item in plan if item != "P")
-        float_params = {"convs": [dict(params["convs"][0])],
-                        "head": dict(params["head"])}
-        for ci in range(1, n_convs):
-            layers[f"convs.{ci}"] = _pack_conv(params["convs"][ci], pc, lif)
-        layers["fc1"] = _pack_dense(params["fc1"], pc, lif)
+    float_params: Dict = {}
+    for spec in graph.param_specs():
+        if isinstance(spec, Conv) and not spec.stem:
+            layers[spec.name] = _pack_conv(get_path(params, spec.name), pc,
+                                           lif, stride=spec.stride)
+        elif isinstance(spec, Dense):
+            layers[spec.name] = _pack_dense(get_path(params, spec.name), pc,
+                                            lif)
+        else:   # stem conv + readout head stay float
+            set_path(float_params, spec.name,
+                     dict(get_path(params, spec.name)))
 
     return DeployedModel(cfg=cfg, float_params=float_params, layers=layers)
 
@@ -327,21 +325,12 @@ def _flatten_params(tree, prefix: str = ""):
 
 
 def _unflatten_params(flat: Dict[str, jnp.ndarray]):
-    """Inverse of :func:`_flatten_params` (numeric components -> lists)."""
+    """Inverse of :func:`_flatten_params` (numeric components -> lists).
+    ``_flatten_params`` yields paths with list indices ascending, which is
+    exactly the append order :func:`repro.graph.spec.set_path` needs."""
+    from repro.graph.spec import set_path
+
     root: Dict = {}
     for path, arr in flat.items():
-        parts = path.split(".")
-        node = root
-        for a, b in zip(parts[:-1], parts[1:]):
-            node = node.setdefault(a, {"__list__": b.isdigit()})
-        node[parts[-1]] = arr
-
-    def realize(node):
-        if not isinstance(node, dict):
-            return node
-        is_list = node.pop("__list__", False)
-        if is_list:
-            return [realize(node[k]) for k in sorted(node, key=int)]
-        return {k: realize(v) for k, v in node.items()}
-
-    return realize(root)
+        set_path(root, path, arr)
+    return root

@@ -1,0 +1,49 @@
+"""Declarative model-graph API: define the SNN once, lower it many ways.
+
+The software counterpart of L-SPINE's unified multi-precision datapath:
+one :class:`ModelGraph` of typed :class:`LayerSpec` nodes per model
+family (``vgg_graph`` / ``resnet_graph``), and pluggable executors that
+lower the same graph to float/BPTT training (:class:`FloatExecutor`),
+per-call integer deployment (:class:`IntExecutor`), and packaged serving
+(:class:`PackagedExecutor`).  Parameter init, threshold calibration, MAC
+counting, and ``repro.deploy.deploy``'s packing walk are traversals of
+the same graph — see graph/README.md for the node/executor contract.
+
+models/snn_cnn keeps its historical ``init/calibrate/apply/count_macs``
+API as thin shims over this package.
+"""
+
+from repro.graph.build import (         # noqa: F401
+    RESNET18_STAGES,
+    VGG9_PLAN,
+    VGG16_PLAN,
+    build_graph,
+    effective_plan,
+    resnet_graph,
+    vgg_graph,
+)
+from repro.graph.executors import (     # noqa: F401
+    Executor,
+    FloatExecutor,
+    IntExecutor,
+    PackagedExecutor,
+    executor_for,
+    run_graph,
+)
+from repro.graph.passes import (        # noqa: F401
+    CalibratingExecutor,
+    graph_calibrate,
+    graph_init,
+)
+from repro.graph.spec import (          # noqa: F401
+    Conv,
+    Dense,
+    Encode,
+    LayerSpec,
+    ModelGraph,
+    Pool,
+    Readout,
+    Residual,
+    get_path,
+    set_path,
+)

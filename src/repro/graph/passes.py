@@ -1,0 +1,121 @@
+"""Non-forward graph traversals: init, threshold calibration, packing.
+
+These replace the hand-maintained per-family walks that used to live in
+models/snn_cnn.py (``vgg_init``/``resnet_init``/``calibrate``) and
+deploy/package.py (``deploy``'s pytree walk).  Each is a traversal of
+the same :class:`~repro.graph.spec.ModelGraph` the forwards run, so a
+topology edit propagates to every consumer by construction.
+
+``graph_init`` reproduces the historical parameter draws bit for bit:
+each param-bearing spec carries a ``key_index`` into the family's pinned
+key schedule (``ModelGraph.n_init_keys``), so splitting the PRNG key
+yields the exact keys the pre-graph init functions consumed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.snn_layers import _conv2d, conv_init, dense_init
+from repro.graph.executors import FloatExecutor, run_graph
+from repro.graph.spec import (
+    Conv,
+    Dense,
+    ModelGraph,
+    Readout,
+    Residual,
+    set_path,
+)
+
+
+def graph_init(key, graph: ModelGraph):
+    """Initialize a params pytree for ``graph`` — same structure (and
+    same draws) as the historical per-family init: nested dicts/lists
+    addressed by the specs' dotted paths, with each ResNet block's
+    static ``stride`` recorded alongside its conv params."""
+    keys = jax.random.split(key, graph.n_init_keys)
+    params: dict = {}
+    for node in graph.iter_flat():
+        if isinstance(node, Conv):
+            set_path(params, node.name,
+                     conv_init(keys[node.key_index], node.c_in, node.c_out,
+                               node.k))
+        elif isinstance(node, (Dense, Readout)):
+            set_path(params, node.name,
+                     dense_init(keys[node.key_index], node.d_in, node.d_out))
+        elif isinstance(node, Residual):
+            set_path(params, f"{node.name}.stride", node.stride)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# threshold balancing (Diehl-style): deep direct-encoded SNNs suffer
+# activity collapse (firing rates decay ~4x per thresholded layer).  We
+# calibrate each layer's per-channel current gain "g" on one batch so the
+# pre-threshold current std sits at ~threshold, keeping every layer in a
+# healthy firing regime.  g stays a learnable parameter afterwards.
+# ---------------------------------------------------------------------------
+
+def _balance(i_syn_t, threshold, target=1.1):
+    red = tuple(range(i_syn_t.ndim - 1))
+    std = jnp.std(i_syn_t, axis=red) + 1e-6
+    return jnp.clip(target * threshold / std, 0.05, 100.0)
+
+
+class CalibratingExecutor(FloatExecutor):
+    """Float traversal with a pre-layer gain hook: before each conv or
+    dense fires, compute its pre-gain synaptic current on the calibration
+    batch, balance the per-channel gain ``g`` against the threshold, and
+    write it back into the params — then forward through the updated
+    layer so downstream layers calibrate against realistic activity.
+
+    Calibration always runs the pure float twin (no fake-quant — the
+    gains feed both QAT training and the integer deployment fold), and
+    the readout head is left untouched.
+    """
+
+    kind = "calibrate"
+
+    def __init__(self, graph: ModelGraph, params):
+        super().__init__(graph, params)
+        self.pc = None   # calibrate on the un-quantized forward
+
+    def _conv(self, spec, x):
+        p = self.param(spec)
+        w = p["w"]
+        i_syn = jax.vmap(
+            lambda xx: _conv2d(xx.astype(w.dtype), w, stride=spec.stride)
+        )(x)
+        set_path(self.params, spec.name,
+                 dict(p, g=_balance(i_syn, self.lif.threshold)))
+        return super()._conv(spec, x)
+
+    def _dense(self, spec, x):
+        p = self.param(spec)
+        i_syn = jnp.einsum("tbi,io->tbo", x, p["w"])
+        set_path(self.params, spec.name,
+                 dict(p, g=_balance(i_syn, self.lif.threshold)))
+        return x   # nothing downstream of fc1 consumes spikes
+
+    def readout(self, spec, x):
+        self.trace.append(("readout", spec.name, 1))
+        return x   # the head is not calibrated; skip its compute
+
+
+def _structural_copy(tree):
+    """Copy the dict/list spine of a params pytree (leaves shared), so
+    calibration never mutates the caller's tree."""
+    if isinstance(tree, dict):
+        return {k: _structural_copy(v) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [_structural_copy(v) for v in tree]
+    return tree
+
+
+def graph_calibrate(params, graph: ModelGraph, images):
+    """Returns params with balanced per-layer gains (one forward pass of
+    the calibration batch).  The input tree is not mutated."""
+    ex = CalibratingExecutor(graph, _structural_copy(params))
+    run_graph(graph, ex, images)
+    return ex.params

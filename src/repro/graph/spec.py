@@ -1,0 +1,254 @@
+"""Typed layer-graph specs — the single source of truth for SNN topology.
+
+L-SPINE's hardware thesis is one multi-precision datapath driven by a
+precision-control word; this module is its software counterpart: the
+model architecture is written down ONCE, as a tuple of :class:`LayerSpec`
+nodes inside a :class:`ModelGraph`, and every consumer — float/BPTT
+training, the per-call integer forward, the packaged serving forward,
+parameter init, threshold calibration, MAC counting, and ``deploy()``'s
+packing walk — is a traversal of the same nodes (graph/executors.py,
+graph/passes.py).  Before this layer existed the topology was
+hand-maintained in five places and the copies drifted (the ROADMAP's
+training-aware-deployment rate gap was a direct symptom).
+
+Node kinds
+----------
+``Encode``    direct (constant-current) coding: broadcast the analog image
+              over T timesteps.
+``Conv``      spiking 3x3/1x1 conv + LIF rollout.  ``stem=True`` marks the
+              first conv, which consumes analog currents and therefore
+              stays on the float twin even on the integer path.
+``Pool``      2x2 spatial pool; executors choose the op (avg for float
+              training, binary-preserving max/OR for the integer path).
+``Residual``  a ResNet basic block: two body convs + optional 1x1
+              projection shortcut; executors choose the merge (rate-
+              preserving average vs spike OR).
+``Dense``     spiking fully-connected layer (input flattened to (T,B,F)).
+``Readout``   non-spiking accumulate-over-T head (optionally preceded by
+              a global average pool for the ResNet family).
+
+Every parameter-bearing spec carries its ``name`` — the flat dotted path
+into the params pytree (``convs.1``, ``blocks.2.proj``, ``fc1``) — which
+is also the deploy package's layer key, and a ``key_index`` into the
+family's init key schedule so ``graph_init`` reproduces the historical
+parameter draws bit for bit.
+
+Specs are frozen dataclasses: a graph is immutable, hashable geometry.
+Nothing here imports models/snn_cnn — the cfg travels by duck type
+(``model``, ``img_size``, ``timesteps``, ``ch()``, ``int_path``...), so
+snn_cnn can shim on top of this package without an import cycle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """Base node.  ``name`` is the layer's flat dotted param path (also
+    the deploy-package key for packed layers); structural nodes that own
+    no parameters (Encode/Pool) use a positional placeholder name."""
+
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Encode(LayerSpec):
+    """Direct (constant-current) coding: (B,H,W,C) -> (T,B,H,W,C)."""
+
+    timesteps: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv(LayerSpec):
+    """Spiking conv + LIF rollout.
+
+    out_hw is the output spatial dim (== input dim / stride under SAME
+    padding) recorded at build time — it feeds graph_count_macs without
+    re-deriving the spatial plan.  key_index points into the family's
+    init key schedule (see graph_init).
+    """
+
+    c_in: int = 0
+    c_out: int = 0
+    k: int = 3
+    stride: int = 1
+    stem: bool = False
+    out_hw: int = 0
+    key_index: int = -1
+
+    @property
+    def macs(self) -> int:
+        """Synaptic ops for one timestep of this conv."""
+        return self.out_hw * self.out_hw * self.k * self.k \
+            * self.c_in * self.c_out
+
+
+@dataclasses.dataclass(frozen=True)
+class Pool(LayerSpec):
+    """2x2 spatial pool; the op is executor-chosen (avg vs max/OR)."""
+
+    window: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Residual(LayerSpec):
+    """ResNet basic block: body convs chained, optional 1x1 projection
+    shortcut, executor-chosen merge.  ``name`` is the block path
+    (``blocks.3``); the nested convs carry their own full paths."""
+
+    body: Tuple[Conv, ...] = ()
+    proj: Optional[Conv] = None
+    stride: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense(LayerSpec):
+    """Spiking fully-connected layer; input is flattened to (T,B,d_in)."""
+
+    d_in: int = 0
+    d_out: int = 0
+    key_index: int = -1
+
+    @property
+    def macs(self) -> int:
+        return self.d_in * self.d_out
+
+
+@dataclasses.dataclass(frozen=True)
+class Readout(LayerSpec):
+    """Non-spiking readout: mean-over-T of accumulated currents.
+    ``spatial_mean`` prepends a global average pool over (H, W) — the
+    ResNet family's head."""
+
+    d_in: int = 0
+    d_out: int = 0
+    key_index: int = -1
+    spatial_mean: bool = False
+
+    @property
+    def macs(self) -> int:
+        return self.d_in * self.d_out
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelGraph:
+    """One SNN architecture: an ordered node tuple + the cfg it was built
+    for.  ``n_init_keys`` pins the family's historical RNG key schedule
+    (vgg: one key per plan item + 2; resnet: a fixed split of 64) so
+    graph_init's draws are bit-identical with the pre-graph init code.
+    """
+
+    cfg: object                       # SNNConfig (duck-typed, no cycle)
+    nodes: Tuple[LayerSpec, ...]
+    n_init_keys: int
+
+    # -- traversal helpers ---------------------------------------------------
+    def iter_flat(self) -> Iterator[LayerSpec]:
+        """Every node in execution order, with Residual bodies/projections
+        flattened in their execution order (conv1, conv2, proj)."""
+        for node in self.nodes:
+            if isinstance(node, Residual):
+                yield node
+                yield from node.body
+                if node.proj is not None:
+                    yield node.proj
+            else:
+                yield node
+
+    def param_specs(self) -> Iterator[LayerSpec]:
+        """Parameter-bearing specs (Conv/Dense/Readout) in init order."""
+        for node in self.iter_flat():
+            if isinstance(node, (Conv, Dense, Readout)):
+                yield node
+
+    def packable_specs(self) -> Iterator[LayerSpec]:
+        """Specs the integer path routes through the fused kernels — i.e.
+        what ``deploy()`` packs: every non-stem Conv and every Dense.
+        The stem Conv and the Readout stay float (their activations are
+        not 1-bit)."""
+        for spec in self.param_specs():
+            if isinstance(spec, Conv) and not spec.stem:
+                yield spec
+            elif isinstance(spec, Dense):
+                yield spec
+
+    # -- accounting ----------------------------------------------------------
+    def count_macs(self) -> int:
+        """Synaptic-op count per inference: sum of per-node MACs over one
+        timestep, times T.  Replaces the hand-maintained count in
+        models/snn_cnn.count_macs (which now delegates here)."""
+        macs = sum(spec.macs for spec in self.param_specs())
+        return macs * self.cfg.timesteps
+
+    def topology(self) -> Tuple[Tuple, ...]:
+        """Hashable geometry fingerprint — one row per flattened node.
+        The golden-topology tests pin this, so any graph edit that would
+        silently desync count_macs or deploy geometry fails loudly."""
+        rows = []
+        for spec in self.iter_flat():
+            if isinstance(spec, Encode):
+                rows.append(("encode", spec.timesteps))
+            elif isinstance(spec, Conv):
+                rows.append(("conv", spec.name, spec.c_in, spec.c_out,
+                             spec.k, spec.stride, spec.out_hw, spec.stem))
+            elif isinstance(spec, Pool):
+                rows.append(("pool", spec.window))
+            elif isinstance(spec, Residual):
+                rows.append(("residual", spec.name, spec.stride,
+                             spec.proj is not None))
+            elif isinstance(spec, Dense):
+                rows.append(("dense", spec.name, spec.d_in, spec.d_out))
+            elif isinstance(spec, Readout):
+                rows.append(("readout", spec.name, spec.d_in, spec.d_out,
+                             spec.spatial_mean))
+        return tuple(rows)
+
+    def summary(self) -> str:
+        """Human-readable one-line-per-node description."""
+        lines = [f"ModelGraph({self.cfg.model}, T={self.cfg.timesteps}, "
+                 f"img={self.cfg.img_size})"]
+        for row in self.topology():
+            lines.append("  " + " ".join(str(c) for c in row))
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# dotted-path access into dict/list params pytrees
+# ---------------------------------------------------------------------------
+
+def get_path(tree, path: str):
+    """Resolve a flat dotted path (``blocks.2.conv1``) in a nested
+    dict/list params pytree."""
+    node = tree
+    for part in path.split("."):
+        node = node[int(part)] if part.isdigit() else node[part]
+    return node
+
+
+def set_path(tree: dict, path: str, value) -> None:
+    """Insert ``value`` at a dotted path, materializing dicts for string
+    components and lists for numeric ones.  List indices must arrive in
+    append order (graph traversals are ordered, so they do)."""
+    parts = path.split(".")
+    node = tree
+    for part, nxt in zip(parts[:-1], parts[1:]):
+        container = [] if nxt.isdigit() else {}
+        if part.isdigit():
+            i = int(part)
+            if i == len(node):
+                node.append(container)
+            node = node[i]
+        else:
+            node = node.setdefault(part, container)
+    last = parts[-1]
+    if last.isdigit():
+        i = int(last)
+        if i == len(node):
+            node.append(value)
+        else:
+            node[i] = value
+    else:
+        node[last] = value

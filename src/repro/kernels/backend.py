@@ -6,20 +6,32 @@
               (used for full-model CPU smoke tests and the dry-run lowering;
               roofline byte counts still reflect packed weights)
 
-Default: 'jnp' on CPU hosts, 'pallas' when a TPU is present.
+Default: 'jnp' on CPU hosts, 'pallas' when a TPU is present.  The
+``REPRO_BACKEND`` env var overrides the default (validated against the
+same set), so CI legs and launchers can pick the backend without code
+edits; an explicit ``set_backend``/``use_backend`` still wins over both.
 """
 
 from __future__ import annotations
 
 import contextlib
+import os
 
 import jax
 
 _BACKEND: str | None = None
 _VALID = ("pallas", "interpret", "jnp")
+_ENV_VAR = "REPRO_BACKEND"
 
 
 def default_backend() -> str:
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        if env not in _VALID:
+            raise ValueError(
+                f"{_ENV_VAR}={env!r} is not a valid backend; "
+                f"expected one of {_VALID}")
+        return env
     try:
         plat = jax.default_backend()
     except Exception:  # pragma: no cover

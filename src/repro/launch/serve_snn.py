@@ -27,6 +27,9 @@ def main():
     ap.add_argument("--package", default="",
                     help="save the packed model npz here (and reload it "
                          "before serving, exercising the artifact path)")
+    ap.add_argument("--show-graph", action="store_true",
+                    help="print the declarative model graph (the one "
+                         "topology the train/int/packaged lowerings share)")
     args = ap.parse_args()
 
     import time
@@ -41,6 +44,8 @@ def main():
     from repro.models import snn_cnn
 
     cfg = deploy_config(args.model, args.bits, smoke=args.smoke)
+    if args.show_graph:
+        print(cfg.graph().summary())
     params = snn_cnn.init(jax.random.PRNGKey(0), cfg)
     t0 = time.time()
     model = deploy(params, cfg)

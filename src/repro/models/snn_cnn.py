@@ -10,55 +10,46 @@ packed L-SPINE format.
 smoke tests use scale≈1/16).  Input: (B, H, W, C) analog images, encoded
 with direct (constant-current) coding over T timesteps.
 
-Two forward paths share one parameter pytree: the float/surrogate
-training path, and (``int_deploy=True`` + quantized precision) the
-integer deployment path that runs every post-stem layer through the
-fused packed kernels — spiking convs via kernels/fused_conv, the FC
-head via kernels/fused_nce — with 1-bit spike traffic between layers.
+This module is a thin shim over the declarative model-graph API
+(repro.graph): the topology is defined ONCE per family
+(``graph.vgg_graph`` / ``graph.resnet_graph``) and every entry point
+here — ``init``, ``calibrate``, ``apply``, ``apply_with_rates``,
+``count_macs`` — is a traversal of that graph under the appropriate
+executor:
+
+  * float/BPTT training twin        (graph.FloatExecutor),
+  * per-call integer deployment     (graph.IntExecutor — every
+    post-stem layer through the fused packed kernels, re-quantizing
+    per call), selected by ``cfg.int_deploy`` + a quantized precision,
+  * packaged serving (``package=`` a ``repro.deploy.DeployedModel`` —
+    pre-packed weights + folded thresholds, zero quantization on the
+    hot path; graph.PackagedExecutor).  Bit-exact with the per-call
+    path.
+
+The plan constants and ``effective_plan`` live in repro.graph.build and
+are re-exported here for backward compatibility.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
-
-import jax
-import jax.numpy as jnp
 
 from repro.core.lif import LIFConfig
-from repro.core.snn_layers import (
-    avgpool_t,
-    conv_init,
-    dense_init,
-    maxpool_t,
-    readout_apply,
-    spiking_conv_apply,
-    spiking_conv_int_apply,
-    spiking_dense_apply,
-    spiking_dense_int_apply,
+from repro.graph import (
+    build_graph,
+    executor_for,
+    graph_calibrate,
+    graph_init,
+    run_graph,
+)
+from repro.graph.build import (         # noqa: F401 — re-exported compat
+    RESNET18_STAGES,
+    VGG9_PLAN,
+    VGG16_PLAN,
+    _base_plan,
+    effective_plan,
 )
 from repro.quant.formats import PrecisionConfig
-
-VGG16_PLAN = [64, 64, "P", 128, 128, "P", 256, 256, 256, "P",
-              512, 512, 512, "P", 512, 512, 512, "P"]
-# shallow variant for quantization sweeps: BPTT through 13 thresholded
-# layers is noisy at small step budgets; 5 convs isolate the precision
-# effect (benchmarks/fig45)
-VGG9_PLAN = [64, 64, "P", 128, 128, "P", 256, "P"]
-RESNET18_STAGES = [(64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2)]
-
-
-def effective_plan(img_size: int, base_plan=None):
-    """VGG plan with pools dropped once the spatial dim reaches 2 — lets
-    reduced smoke configs (img 16) share the paper-size definition."""
-    plan, hw = [], img_size
-    for item in (base_plan if base_plan is not None else VGG16_PLAN):
-        if item == "P":
-            if hw <= 2:
-                continue
-            hw //= 2
-        plan.append(item)
-    return plan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,318 +75,75 @@ class SNNConfig:
     def int_path(self) -> bool:
         return self.int_deploy and self.precision.quantized
 
-
-# ---------------------------------------------------------------------------
-# VGG-16 SNN
-# ---------------------------------------------------------------------------
-
-def _base_plan(cfg):
-    return VGG9_PLAN if cfg.model == "vgg9" else VGG16_PLAN
-
-
-def vgg_init(key, cfg: SNNConfig):
-    params = {"convs": []}
-    c_in = cfg.in_channels
-    plan = effective_plan(cfg.img_size, _base_plan(cfg))
-    keys = jax.random.split(key, len(plan) + 2)
-    i = 0
-    for item in plan:
-        if item == "P":
-            continue
-        c_out = cfg.ch(item)
-        params["convs"].append(conv_init(keys[i], c_in, c_out, 3))
-        c_in = c_out
-        i += 1
-    n_pool = plan.count("P")
-    feat = (cfg.img_size // (2**n_pool)) ** 2 * c_in
-    params["fc1"] = dense_init(keys[-2], feat, cfg.ch(512))
-    params["head"] = dense_init(keys[-1], cfg.ch(512), cfg.n_classes)
-    return params
-
-
-def _record_rate(rates, x):
-    if rates is not None:
-        rates.append(float(jnp.mean(x.astype(jnp.float32))))
-
-
-def vgg_apply(params, cfg: SNNConfig, images: jnp.ndarray,
-              _rates=None, package=None) -> jnp.ndarray:
-    """images: (B, H, W, C) in [0,1].  Returns logits (B, n_classes).
-
-    With ``cfg.int_deploy`` every layer past the first conv runs on the
-    fused integer datapath: the stem consumes direct-encoded analog
-    currents and stays on the float twin (its input is not 1-bit), but
-    its binary output spikes feed packed-conv rollouts from there on.
-    Pools become spike-preserving max pools (an OR for {0,1} planes) so
-    the inter-layer traffic stays 1-bit packable.
-
-    ``package`` (a ``repro.deploy.DeployedModel``) supplies pre-packed
-    weights + folded per-channel thresholds for every integer layer, so
-    the hot path runs zero quantization; without it each integer layer
-    re-quantizes its float params per call.  Bit-exact either way.
-    """
-    if package is not None and not cfg.int_path:
-        raise ValueError("a deploy package drives the integer path only "
-                         "(cfg needs int_deploy + quantized)")
-    pc = cfg.precision if cfg.precision.quantized else None
-    x = jnp.broadcast_to(images, (cfg.timesteps, *images.shape))
-    ci = 0
-    for item in effective_plan(cfg.img_size, _base_plan(cfg)):
-        if item == "P":
-            x = maxpool_t(x) if cfg.int_path else avgpool_t(x)
-        else:
-            if cfg.int_path and ci > 0:
-                if package is not None:
-                    lp = package.layers[f"convs.{ci}"]
-                    x = spiking_conv_int_apply(None, x, cfg.lif,
-                                               cfg.precision, qct=lp.qt,
-                                               threshold_q=lp.theta_q)
-                else:
-                    x = spiking_conv_int_apply(params["convs"][ci], x,
-                                               cfg.lif, cfg.precision)
-            else:
-                x = spiking_conv_apply(params["convs"][ci], x, cfg.lif, pc)
-                if cfg.int_path:
-                    x = x.astype(jnp.int32)
-            _record_rate(_rates, x)
-            ci += 1
-    T, B = x.shape[0], x.shape[1]
-    x = x.reshape(T, B, -1)
-    if cfg.int_path:
-        if package is not None:
-            lp = package.layers["fc1"]
-            x = spiking_dense_int_apply(None, x, cfg.lif, cfg.precision,
-                                        qt=lp.qt, threshold_q=lp.theta_q)
-        else:
-            x = spiking_dense_int_apply(params["fc1"], x, cfg.lif,
-                                        cfg.precision)
-    else:
-        x = spiking_dense_apply(params["fc1"], x, cfg.lif, pc)
-    _record_rate(_rates, x)
-    return readout_apply(params["head"], x)
+    def graph(self):
+        """The declarative model graph this config describes."""
+        return build_graph(self)
 
 
 # ---------------------------------------------------------------------------
-# ResNet-18 SNN
+# graph-lowered entry points
 # ---------------------------------------------------------------------------
-
-def resnet_init(key, cfg: SNNConfig):
-    keys = iter(jax.random.split(key, 64))
-    params = {"stem": conv_init(next(keys), cfg.in_channels, cfg.ch(64), 3)}
-    c_in = cfg.ch(64)
-    blocks = []
-    for c_base, n_blocks, stride in RESNET18_STAGES:
-        c_out = cfg.ch(c_base)
-        for b in range(n_blocks):
-            s = stride if b == 0 else 1
-            blk = {
-                "conv1": conv_init(next(keys), c_in, c_out, 3),
-                "conv2": conv_init(next(keys), c_out, c_out, 3),
-            }
-            if s != 1 or c_in != c_out:
-                blk["proj"] = conv_init(next(keys), c_in, c_out, 1)
-            blk["stride"] = s
-            blocks.append(blk)
-            c_in = c_out
-    params["blocks"] = blocks
-    params["head"] = dense_init(next(keys), c_in, cfg.n_classes)
-    return params
-
-
-def _int_block_convs(params, package):
-    """Per-residual-block operands for the fused integer path: yields
-    (conv1, conv2, proj-or-None) kwarg dicts for
-    ``spiking_conv_int_apply``, resolved from the deploy package
-    (pre-packed weights + thresholds) or from the float params (per-call
-    quantization) — so one block loop in :func:`resnet_apply` serves
-    both, keeping the two paths bit-identical by construction."""
-    if package is None:
-        for blk in params["blocks"]:
-            s = blk["stride"]
-            yield (dict(params=blk["conv1"], stride=s),
-                   dict(params=blk["conv2"]),
-                   dict(params=blk["proj"], stride=s)
-                   if "proj" in blk else None)
-        return
-    bi = 0
-    while f"blocks.{bi}.conv1" in package.layers:
-        lp1 = package.layers[f"blocks.{bi}.conv1"]
-        lp2 = package.layers[f"blocks.{bi}.conv2"]
-        lpp = package.layers.get(f"blocks.{bi}.proj")
-        yield (dict(params=None, stride=lp1.stride, qct=lp1.qt,
-                    threshold_q=lp1.theta_q),
-               dict(params=None, qct=lp2.qt, threshold_q=lp2.theta_q),
-               dict(params=None, stride=lpp.stride, qct=lpp.qt,
-                    threshold_q=lpp.theta_q) if lpp is not None else None)
-        bi += 1
-
-
-def resnet_apply(params, cfg: SNNConfig, images: jnp.ndarray,
-                 _rates=None, package=None) -> jnp.ndarray:
-    """With ``cfg.int_deploy`` the stem stays on the float twin (its
-    input is direct-encoded analog current) and every residual block —
-    both 3x3 convs, strides and the 1x1 projection shortcuts — runs the
-    fused packed-conv rollout.  The residual merge becomes an OR
-    (``maximum`` of {0,1} planes) so the block output stays 1-bit
-    packable; the float path's rate-preserving ``(h + sc) * 0.5`` would
-    emit fractional events no packed datapath can carry.
-
-    ``package`` (a ``repro.deploy.DeployedModel``) supplies pre-packed
-    weights + folded per-channel thresholds for every block conv, so the
-    hot path runs zero quantization.  Bit-exact with the per-call path.
-    """
-    if package is not None and not cfg.int_path:
-        raise ValueError("a deploy package drives the integer path only "
-                         "(cfg needs int_deploy + quantized)")
-    pc = cfg.precision if cfg.precision.quantized else None
-    x = jnp.broadcast_to(images, (cfg.timesteps, *images.shape))
-    x = spiking_conv_apply(params["stem"], x, cfg.lif, pc)
-    if cfg.int_path:
-        x = x.astype(jnp.int32)
-    _record_rate(_rates, x)
-    if cfg.int_path:
-        for c1, c2, cp in _int_block_convs(params, package):
-            h = spiking_conv_int_apply(c1.pop("params"), x, cfg.lif,
-                                       cfg.precision, **c1)
-            h = spiking_conv_int_apply(c2.pop("params"), h, cfg.lif,
-                                       cfg.precision, **c2)
-            sc = x
-            if cp is not None:
-                sc = spiking_conv_int_apply(cp.pop("params"), x, cfg.lif,
-                                            cfg.precision, **cp)
-            x = jnp.maximum(h, sc)   # spike OR: binary-preserving merge
-            _record_rate(_rates, x)
-    else:
-        for blk in params["blocks"]:
-            s = blk["stride"]
-            h = spiking_conv_apply(blk["conv1"], x, cfg.lif, pc, stride=s)
-            h = spiking_conv_apply(blk["conv2"], h, cfg.lif, pc)
-            sc = x
-            if "proj" in blk:
-                sc = spiking_conv_apply(blk["proj"], x, cfg.lif, pc,
-                                        stride=s)
-            x = (h + sc) * 0.5   # spike-rate-preserving residual merge
-            _record_rate(_rates, x)
-    x = jnp.mean(x, axis=(2, 3))            # (T, B, C) global avg pool
-    return readout_apply(params["head"], x)
-
 
 def init(key, cfg: SNNConfig):
-    return (resnet_init if cfg.model == "resnet18" else vgg_init)(key, cfg)
-
-
-# ---------------------------------------------------------------------------
-# threshold balancing (Diehl-style): deep direct-encoded SNNs suffer
-# activity collapse (firing rates decay ~4x per thresholded layer).  We
-# calibrate each layer's per-channel current gain "g" on one batch so the
-# pre-threshold current std sits at ~threshold, keeping every layer in a
-# healthy firing regime.  g stays a learnable parameter afterwards.
-# ---------------------------------------------------------------------------
-
-def _balance(i_syn_t, g_shape, threshold, target=1.1):
-    red = tuple(range(i_syn_t.ndim - 1))
-    std = jnp.std(i_syn_t, axis=red) + 1e-6
-    return jnp.clip(target * threshold / std, 0.05, 100.0)
+    """Initialize the float params pytree (graph traversal; draws are
+    bit-identical with the historical per-family init)."""
+    return graph_init(key, build_graph(cfg))
 
 
 def calibrate(params, cfg: SNNConfig, images):
-    """Returns params with balanced per-layer gains (one fwd pass)."""
-    from repro.core.snn_layers import _conv2d
+    """Returns params with balanced per-layer gains (one fwd pass) —
+    Diehl-style threshold balancing, see graph/passes.py."""
+    return graph_calibrate(params, build_graph(cfg), images)
 
-    th = cfg.lif.threshold
-    x = jnp.broadcast_to(images, (cfg.timesteps, *images.shape))
 
-    def conv_gain(p, x, stride=1):
-        w = p["w"]
-        i = jax.vmap(lambda xx: _conv2d(xx.astype(w.dtype), w,
-                                        stride=stride))(x)
-        return _balance(i, p["g"].shape, th)
-
-    if cfg.model != "resnet18":
-        ci = 0
-        for item in effective_plan(cfg.img_size, _base_plan(cfg)):
-            if item == "P":
-                x = avgpool_t(x)
-                continue
-            g = conv_gain(params["convs"][ci], x)
-            params["convs"][ci] = dict(params["convs"][ci], g=g)
-            x = spiking_conv_apply(params["convs"][ci], x, cfg.lif)
-            ci += 1
-        T, B = x.shape[0], x.shape[1]
-        x = x.reshape(T, B, -1)
-        i = jnp.einsum("tbi,io->tbo", x, params["fc1"]["w"])
-        params["fc1"] = dict(params["fc1"],
-                             g=_balance(i, params["fc1"]["g"].shape, th))
-        return params
-
-    g = conv_gain(params["stem"], x)
-    params["stem"] = dict(params["stem"], g=g)
-    x = spiking_conv_apply(params["stem"], x, cfg.lif)
-    for bi, blk in enumerate(params["blocks"]):
-        s = blk["stride"]
-        blk = dict(blk)
-        blk["conv1"] = dict(blk["conv1"],
-                            g=conv_gain(blk["conv1"], x, stride=s))
-        h = spiking_conv_apply(blk["conv1"], x, cfg.lif, stride=s)
-        blk["conv2"] = dict(blk["conv2"], g=conv_gain(blk["conv2"], h))
-        h = spiking_conv_apply(blk["conv2"], h, cfg.lif)
-        sc = x
-        if "proj" in blk:
-            blk["proj"] = dict(blk["proj"],
-                               g=conv_gain(blk["proj"], x, stride=s))
-            sc = spiking_conv_apply(blk["proj"], x, cfg.lif, stride=s)
-        x = (h + sc) * 0.5
-        params["blocks"][bi] = blk
-    return params
+def _graph_apply(params, cfg: SNNConfig, images, rates=None, package=None):
+    graph = build_graph(cfg)
+    ex = executor_for(graph, params, package=package)
+    return run_graph(graph, ex, images, rates=rates)
 
 
 def apply(params, cfg: SNNConfig, images, package=None):
-    """Forward.  With ``package`` (repro.deploy.DeployedModel) the integer
-    layers consume pre-packed weights + folded thresholds — the zero-
-    quantization serving path; ``params`` then only needs the float
-    stem/head leaves (``package.float_params``)."""
-    return (resnet_apply if cfg.model == "resnet18" else vgg_apply)(
-        params, cfg, images, package=package)
+    """Forward: (B, H, W, C) images in [0,1] -> (B, n_classes) logits.
+
+    With ``cfg.int_deploy`` every layer past the direct-encoded stem
+    runs on the fused integer datapath with 1-bit spike traffic between
+    layers.  With ``package`` (a ``repro.deploy.DeployedModel``) the
+    integer layers consume pre-packed weights + folded thresholds — the
+    zero-quantization serving path; ``params`` then only needs the float
+    stem/head leaves (``package.float_params``).  Bit-exact either way.
+    """
+    return _graph_apply(params, cfg, images, package=package)
 
 
 def apply_with_rates(params, cfg: SNNConfig, images, package=None):
     """Forward pass that also reports per-spiking-layer mean firing rates
     (eager-only instrumentation — used to compare the float and integer
     deployment paths' spike activity)."""
-    rates = []
-    logits = (resnet_apply if cfg.model == "resnet18" else vgg_apply)(
-        params, cfg, images, _rates=rates, package=package)
+    rates: list = []
+    logits = _graph_apply(params, cfg, images, rates=rates, package=package)
     return logits, rates
 
 
 def count_macs(cfg: SNNConfig) -> int:
-    """Synaptic-op count per inference (one timestep) — feeds the paper's
-    latency/energy model in benchmarks/."""
-    macs = 0
-    hw = cfg.img_size
-    c_in = cfg.in_channels
-    if cfg.model != "resnet18":
-        for item in effective_plan(cfg.img_size, _base_plan(cfg)):
-            if item == "P":
-                hw //= 2
-            else:
-                c_out = cfg.ch(item)
-                macs += hw * hw * 9 * c_in * c_out
-                c_in = c_out
-        macs += (hw * hw * c_in) * cfg.ch(512) + cfg.ch(512) * cfg.n_classes
-    else:
-        c = cfg.ch(64)
-        macs += hw * hw * 9 * cfg.in_channels * c
-        c_in = c
-        for c_base, n_blocks, stride in RESNET18_STAGES:
-            c_out = cfg.ch(c_base)
-            for b in range(n_blocks):
-                s = stride if b == 0 else 1
-                hw = hw // s
-                macs += hw * hw * 9 * c_in * c_out
-                macs += hw * hw * 9 * c_out * c_out
-                if s != 1 or c_in != c_out:
-                    macs += hw * hw * c_in * c_out
-                c_in = c_out
-        macs += c_in * cfg.n_classes
-    return macs * cfg.timesteps
+    """Synaptic-op count per inference (one timestep x T) — feeds the
+    paper's latency/energy model in benchmarks/.  A graph traversal, so
+    it can never drift from the topology the forwards execute."""
+    return build_graph(cfg).count_macs()
+
+
+# -- legacy per-family aliases (the graph dispatches internally) ------------
+
+def vgg_apply(params, cfg: SNNConfig, images, _rates=None, package=None):
+    return _graph_apply(params, cfg, images, rates=_rates, package=package)
+
+
+def resnet_apply(params, cfg: SNNConfig, images, _rates=None, package=None):
+    return _graph_apply(params, cfg, images, rates=_rates, package=package)
+
+
+def vgg_init(key, cfg: SNNConfig):
+    return graph_init(key, build_graph(cfg))
+
+
+def resnet_init(key, cfg: SNNConfig):
+    return graph_init(key, build_graph(cfg))

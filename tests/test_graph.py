@@ -1,0 +1,312 @@
+"""Declarative model-graph API (repro.graph): executor parity + golden
+topology.
+
+The contract under test (ISSUE 5 acceptance criteria):
+
+  * the float, per-call integer, and packaged executors traverse
+    IDENTICAL layer sequences for both model families — the pool/merge
+    op choice is an executor method, never a topology fork;
+  * golden-topology pins: the exact node rows, MAC counts, and deploy
+    geometry for reference configs, so a graph edit that would silently
+    desync ``count_macs`` or the deploy pack walk fails loudly here;
+  * ``graph_init``/``graph_calibrate`` reproduce the historical param
+    structure (stride markers, gain shapes) and never mutate the input;
+  * ``REPRO_BACKEND`` selects the kernel backend without code edits.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.deploy import deploy
+from repro.graph import (
+    Conv,
+    Dense,
+    FloatExecutor,
+    IntExecutor,
+    PackagedExecutor,
+    Readout,
+    build_graph,
+    executor_for,
+    graph_calibrate,
+    graph_init,
+    run_graph,
+)
+from repro.graph.spec import get_path, set_path
+from repro.models import snn_cnn
+from repro.quant.formats import PrecisionConfig
+
+
+def small_cfg(model="vgg9", bits=16, int_deploy=False, timesteps=2):
+    return snn_cnn.SNNConfig(
+        model=model, img_size=16, timesteps=timesteps, scale=0.15,
+        n_classes=4, int_deploy=int_deploy,
+        precision=PrecisionConfig(bits=bits))
+
+
+def make_images(cfg, n=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.random(
+        (n, cfg.img_size, cfg.img_size, cfg.in_channels)), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# executor parity: one topology, three lowerings
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["vgg9", "resnet18"])
+def test_executors_traverse_identical_layer_sequences(model):
+    """The core single-source-of-truth property: float, per-call int,
+    and packaged lowerings visit the same nodes in the same order."""
+    cfg_f = small_cfg(model)
+    cfg_i = small_cfg(model, bits=4, int_deploy=True)
+    params = snn_cnn.init(jax.random.PRNGKey(0), cfg_f)
+    images = make_images(cfg_f, n=1)
+
+    ex_f = FloatExecutor(build_graph(cfg_f), params)
+    run_graph(build_graph(cfg_f), ex_f, images)
+
+    ex_i = IntExecutor(build_graph(cfg_i), params)
+    run_graph(build_graph(cfg_i), ex_i, images)
+
+    package = deploy(params, cfg_i)
+    ex_p = PackagedExecutor(build_graph(cfg_i), package.float_params,
+                            package)
+    run_graph(build_graph(cfg_i), ex_p, images)
+
+    assert ex_f.trace == ex_i.trace == ex_p.trace
+    # the trace walks every layer (not a truncated forward)
+    kinds = [row[0] for row in ex_f.trace]
+    assert kinds[0] == "encode" and kinds[-1] == "readout"
+    assert kinds.count("conv") == sum(
+        1 for s in build_graph(cfg_f).iter_flat() if isinstance(s, Conv))
+
+
+def test_executor_for_dispatch():
+    cfg_f = small_cfg()
+    cfg_i = small_cfg(bits=4, int_deploy=True)
+    params = snn_cnn.init(jax.random.PRNGKey(0), cfg_f)
+    assert type(executor_for(build_graph(cfg_f), params)) is FloatExecutor
+    assert type(executor_for(build_graph(cfg_i), params)) is IntExecutor
+    pkg = deploy(params, cfg_i)
+    assert type(executor_for(build_graph(cfg_i), pkg.float_params,
+                             package=pkg)) is PackagedExecutor
+    with pytest.raises(ValueError, match="integer path"):
+        executor_for(build_graph(cfg_f), params, package=pkg)
+
+
+def test_packaged_executor_rejects_desynced_package():
+    """A package whose layer set drifts from the graph fails loudly, not
+    with a KeyError mid-forward."""
+    cfg = small_cfg(bits=4, int_deploy=True)
+    params = snn_cnn.init(jax.random.PRNGKey(0), cfg)
+    pkg = deploy(params, cfg)
+    broken = dataclasses.replace(
+        pkg, layers={k: v for k, v in pkg.layers.items() if k != "fc1"})
+    with pytest.raises(ValueError, match="desync.*fc1"):
+        PackagedExecutor(build_graph(cfg), broken.float_params, broken)
+
+
+@pytest.mark.parametrize("model", ["vgg9", "resnet18"])
+def test_graph_forward_matches_snn_cnn_shim(model):
+    """snn_cnn.apply is a thin shim: driving the graph directly is
+    bit-identical."""
+    cfg = small_cfg(model)
+    params = snn_cnn.init(jax.random.PRNGKey(0), cfg)
+    images = make_images(cfg)
+    graph = build_graph(cfg)
+    direct = run_graph(graph, FloatExecutor(graph, params), images)
+    np.testing.assert_array_equal(
+        np.asarray(direct), np.asarray(snn_cnn.apply(params, cfg, images)))
+
+
+# ---------------------------------------------------------------------------
+# golden topology: fail loudly when a graph edit desyncs geometry
+# ---------------------------------------------------------------------------
+
+GOLDEN_VGG9_TOPOLOGY = (
+    ("encode", 2),
+    ("conv", "convs.0", 3, 9, 3, 1, 16, True),
+    ("conv", "convs.1", 9, 9, 3, 1, 16, False),
+    ("pool", 2),
+    ("conv", "convs.2", 9, 19, 3, 1, 8, False),
+    ("conv", "convs.3", 19, 19, 3, 1, 8, False),
+    ("pool", 2),
+    ("conv", "convs.4", 19, 38, 3, 1, 4, False),
+    ("pool", 2),
+    ("dense", "fc1", 152, 76),
+    ("readout", "head", 76, 4, False),
+)
+
+GOLDEN_RESNET_HEAD_ROWS = (
+    ("encode", 2),
+    ("conv", "stem", 3, 9, 3, 1, 16, True),
+    ("residual", "blocks.0", 1, False),
+    ("conv", "blocks.0.conv1", 9, 9, 3, 1, 16, False),
+    ("conv", "blocks.0.conv2", 9, 9, 3, 1, 16, False),
+)
+GOLDEN_RESNET_STAGE_ENTRY = (
+    ("residual", "blocks.2", 2, True),
+    ("conv", "blocks.2.conv1", 9, 19, 3, 2, 8, False),
+    ("conv", "blocks.2.conv2", 19, 19, 3, 1, 8, False),
+    ("conv", "blocks.2.proj", 9, 19, 1, 2, 8, False),
+)
+
+
+def test_golden_topology_vgg9():
+    topo = build_graph(small_cfg("vgg9")).topology()
+    assert topo == GOLDEN_VGG9_TOPOLOGY
+
+
+def test_golden_topology_resnet18():
+    topo = build_graph(small_cfg("resnet18")).topology()
+    assert topo[:5] == GOLDEN_RESNET_HEAD_ROWS
+    assert topo[8:12] == GOLDEN_RESNET_STAGE_ENTRY
+    assert topo[-1] == ("readout", "head", 76, 4, True)
+    # 8 basic blocks, stage entries 2/4/6 carry strided projections
+    residuals = [r for r in topo if r[0] == "residual"]
+    assert len(residuals) == 8
+    assert [r[2] for r in residuals] == [1, 1, 2, 1, 2, 1, 2, 1]
+    assert [r[3] for r in residuals] == [False, False, True, False,
+                                         True, False, True, False]
+
+
+def test_golden_count_macs():
+    """Exact pinned MAC counts — computed by the pre-graph hand-written
+    count_macs, which the graph traversal must reproduce forever."""
+    assert snn_cnn.count_macs(
+        snn_cnn.SNNConfig(model="vgg16", img_size=32,
+                          timesteps=4)) == 1_257_000_960
+    assert snn_cnn.count_macs(
+        snn_cnn.SNNConfig(model="resnet18", img_size=32,
+                          timesteps=4)) == 2_221_690_880
+    assert snn_cnn.count_macs(small_cfg("vgg9")) == 1_342_176
+    assert snn_cnn.count_macs(small_cfg("resnet18")) == 6_041_824
+    # and count_macs is literally the graph traversal
+    cfg = small_cfg("vgg9")
+    assert build_graph(cfg).count_macs() == snn_cnn.count_macs(cfg)
+
+
+@pytest.mark.parametrize("model", ["vgg9", "resnet18"])
+def test_golden_deploy_geometry(model):
+    """The pack walk and the graph agree on what gets packed, with what
+    geometry — any drift between deploy() and the forwards fails here."""
+    cfg = small_cfg(model, bits=4, int_deploy=True)
+    graph = build_graph(cfg)
+    pkg = deploy(snn_cnn.init(jax.random.PRNGKey(0), cfg), cfg)
+
+    packable = {s.name: s for s in graph.packable_specs()}
+    assert set(pkg.layers) == set(packable)
+    for name, spec in packable.items():
+        lp = pkg.layers[name]
+        if isinstance(spec, Conv):
+            assert lp.kind == "conv"
+            assert lp.stride == spec.stride
+            assert (lp.qt.kh, lp.qt.kw) == (spec.k, spec.k)
+            assert (lp.qt.c_in, lp.qt.c_out) == (spec.c_in, spec.c_out)
+        else:
+            assert lp.kind == "dense"
+            assert lp.qt.shape == (spec.d_out, spec.d_in)
+    # stem + head stay float, resolvable at the specs' dotted paths
+    for spec in graph.param_specs():
+        if isinstance(spec, Conv) and spec.stem or isinstance(spec, Readout):
+            assert get_path(pkg.float_params, spec.name)["w"] is not None
+
+
+# ---------------------------------------------------------------------------
+# init / calibrate traversals
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["vgg9", "resnet18"])
+def test_graph_init_structure_addressable_by_spec_paths(model):
+    cfg = small_cfg(model)
+    graph = build_graph(cfg)
+    params = graph_init(jax.random.PRNGKey(0), graph)
+    for spec in graph.param_specs():
+        p = get_path(params, spec.name)
+        assert set(p) == {"w", "g"}, spec.name
+        if isinstance(spec, Conv):
+            assert p["w"].shape == (spec.k, spec.k, spec.c_in, spec.c_out)
+        else:
+            assert p["w"].shape == (spec.d_in, spec.d_out)
+    if model == "resnet18":   # static stride markers ride in the pytree
+        assert params["blocks"][2]["stride"] == 2
+        assert params["blocks"][0]["stride"] == 1
+
+
+def test_graph_calibrate_balances_without_mutating_input():
+    cfg = small_cfg("vgg9")
+    graph = build_graph(cfg)
+    params = graph_init(jax.random.PRNGKey(0), graph)
+    images = make_images(cfg)
+    out = graph_calibrate(params, graph, images)
+    # input untouched (g stays the init ones-vector)...
+    np.testing.assert_array_equal(
+        np.asarray(params["convs"][1]["g"]),
+        np.ones_like(np.asarray(params["convs"][1]["g"])))
+    # ...output gains balanced away from 1.0 for every spiking layer
+    for spec in graph.param_specs():
+        if isinstance(spec, Readout):
+            continue
+        g = np.asarray(get_path(out, spec.name)["g"])
+        assert g.shape == np.asarray(get_path(params, spec.name)["g"]).shape
+        assert not np.allclose(g, 1.0), spec.name
+
+
+def test_set_path_builds_lists_and_dicts():
+    tree = {}
+    set_path(tree, "convs.0", {"w": 1})
+    set_path(tree, "convs.1", {"w": 2})
+    set_path(tree, "blocks.0.conv1", {"w": 3})
+    set_path(tree, "blocks.0.stride", 2)
+    set_path(tree, "fc1", {"w": 4})
+    assert tree == {"convs": [{"w": 1}, {"w": 2}],
+                    "blocks": [{"conv1": {"w": 3}, "stride": 2}],
+                    "fc1": {"w": 4}}
+    assert get_path(tree, "blocks.0.conv1") == {"w": 3}
+
+
+def test_build_graph_rejects_unknown_family():
+    cfg = dataclasses.replace(small_cfg(), model="alexnet")
+    with pytest.raises(ValueError, match="unknown model family"):
+        build_graph(cfg)
+
+
+def test_dense_and_readout_macs_properties():
+    cfg = small_cfg("vgg9")
+    graph = build_graph(cfg)
+    dense = next(s for s in graph.param_specs() if isinstance(s, Dense))
+    assert dense.macs == dense.d_in * dense.d_out
+    total = sum(s.macs for s in graph.param_specs())
+    assert graph.count_macs() == total * cfg.timesteps
+
+
+# ---------------------------------------------------------------------------
+# REPRO_BACKEND env var (kernels/backend.py satellite)
+# ---------------------------------------------------------------------------
+
+def test_repro_backend_env_overrides_default(monkeypatch):
+    from repro.kernels import backend
+
+    monkeypatch.setenv("REPRO_BACKEND", "interpret")
+    assert backend.default_backend() == "interpret"
+    monkeypatch.setenv("REPRO_BACKEND", "jnp")
+    assert backend.default_backend() == "jnp"
+
+
+def test_repro_backend_env_invalid_raises(monkeypatch):
+    from repro.kernels import backend
+
+    monkeypatch.setenv("REPRO_BACKEND", "cuda")
+    with pytest.raises(ValueError, match="REPRO_BACKEND"):
+        backend.default_backend()
+
+
+def test_repro_backend_env_absent_uses_platform_default(monkeypatch):
+    from repro.kernels import backend
+
+    monkeypatch.delenv("REPRO_BACKEND", raising=False)
+    assert backend.default_backend() in ("pallas", "jnp")
