@@ -29,8 +29,18 @@ def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
         out = fn(*args)
         jax.block_until_ready(out)
         times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+    return median(times) * 1e6
+
+
+def median(xs) -> float:
+    """True median: mean of the two middle elements for even n (picking
+    ``xs[n//2]`` alone biases even-iters timings toward the slow half)."""
+    if not xs:
+        raise ValueError("median of empty sequence")
+    s = sorted(xs)
+    n = len(s)
+    mid = s[n // 2]
+    return mid if n % 2 else (s[n // 2 - 1] + mid) / 2
 
 
 def _parse_derived(derived: str) -> Dict:
@@ -64,24 +74,30 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 def write_json(suite: str, path: str | None = None) -> str:
     """Dump every record emitted so far to ``BENCH_<suite>.json``.
 
-    The file lands next to the benchmarks package by default so it can be
-    committed and diffed across PRs.  Returns the path written.
+    Snapshot-and-reset: the registry is cleared after the dump, so suites
+    run back-to-back in one process (as benchmarks/run.py does) can't
+    bleed records into each other's artifact.  The file lands next to the
+    benchmarks package by default so it can be committed and diffed
+    across PRs.  Returns the path written.
     """
     import os
 
     if path is None:
         path = os.path.join(os.path.dirname(__file__),
                             f"BENCH_{suite}.json")
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    records = list(_RECORDS)
+    _RECORDS.clear()
     doc = {
         "suite": suite,
         "backend": jax.default_backend(),
         "device": platform.machine(),
-        "records": list(_RECORDS),
+        "records": records,
     }
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
-    print(f"  wrote {path} ({len(_RECORDS)} records)")
+    print(f"  wrote {path} ({len(records)} records)")
     return path
 
 

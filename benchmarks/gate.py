@@ -1,0 +1,235 @@
+"""Benchmark regression gate: diff fresh BENCH_<suite>.json vs baselines.
+
+The perf trajectory is only trustworthy if something *reads* the
+committed ``BENCH_*.json`` artifacts and fails loudly when they drift.
+This is that reader:
+
+  * records match by ``name``; a fresh ``us_per_call`` above
+    ``baseline * (1 + tolerance)`` (and above an absolute jitter floor)
+    is a REGRESSION and fails the gate;
+  * derived keys that are deterministic functions of the workload
+    (``compiles``, ``recompiles_after_warmup``, ``hbm_bytes``, …) are
+    asserted EXACTLY — they encode correctness claims (zero recompiles
+    after warmup; packed-traffic ratios), not timings, so no tolerance;
+  * added / removed records are reported explicitly and fail the gate —
+    a silently dropped record is how a regression hides; run with
+    ``--update-baselines`` after an intentional change;
+  * ``--update-baselines`` copies the fresh results over the committed
+    baseline (and prints the per-record deltas being accepted).
+
+Usage:
+  # gate pre-generated fresh output (what CI does):
+  PYTHONPATH=src python benchmarks/gate.py --suite serve \
+      --fresh /tmp/bench/BENCH_serve.json
+  # no --fresh: run the smoke suites now and gate them in one go:
+  PYTHONPATH=src python benchmarks/gate.py
+  # accept an intentional perf change:
+  PYTHONPATH=src python benchmarks/gate.py --update-baselines
+
+Exit status: 0 = within tolerance, 1 = regression/mismatch, 2 = usage
+or missing-file errors.
+
+Tolerance policy (see benchmarks/README.md): the default ``--tol`` is
+wide (75%) because CI runs on unpinned shared CPUs; the gate's job is
+catching structural breakage and step-function regressions (a 2x
+slowdown from an accidental recompile or a dropped fusion), not 5%
+drift.  Tighten per-invocation with ``--tol 0.2`` on quiet hardware.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List, Optional, Tuple
+
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+
+# suites the no-argument invocation regenerates + gates (cheap smoke
+# geometry; the full-shape kernels baseline is refreshed manually)
+DEFAULT_SUITES = ("kernels_smoke", "serve")
+
+# derived keys asserted exactly: deterministic workload/correctness
+# facts, not timings.  Anything not listed is informational (measured
+# throughput, percentiles, speedups) and never gated.
+STRUCTURAL_KEYS = (
+    "bits", "layers", "compiles", "recompiles_after_warmup", "batches",
+    "T", "hw", "bytes", "hbm_bytes", "packed_bytes", "spike_bytes",
+    "dense_spike_bytes", "v5e_traffic_ratio", "vs_dense", "compression",
+    "host_timing_is_parity_check",
+)
+
+# absolute jitter floor: a "regression" under this many microseconds is
+# scheduler noise regardless of the relative tolerance
+ABS_FLOOR_US = 200.0
+
+
+def load_doc(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    for key in ("suite", "records"):
+        if key not in doc:
+            raise ValueError(f"{path}: not a BENCH doc (missing {key!r})")
+    return doc
+
+
+def _by_name(doc: dict) -> Dict[str, dict]:
+    recs = {}
+    for r in doc["records"]:
+        if r["name"] in recs:
+            raise ValueError(f"duplicate record name {r['name']!r}")
+        recs[r["name"]] = r
+    return recs
+
+
+def compare(baseline: dict, fresh: dict, tol: float = 0.75,
+            abs_floor_us: float = ABS_FLOOR_US) -> dict:
+    """Diff two BENCH docs.  Returns a report dict:
+
+      ok          — gate verdict
+      regressions — [(name, base_us, fresh_us, ratio), ...]
+      structural  — [(name, key, base_val, fresh_val), ...]
+      added / removed — record names only on one side
+      checked     — number of matched records
+    """
+    base, new = _by_name(baseline), _by_name(fresh)
+    report = {
+        "regressions": [], "structural": [],
+        "added": sorted(set(new) - set(base)),
+        "removed": sorted(set(base) - set(new)),
+        "checked": 0,
+    }
+    for name in sorted(set(base) & set(new)):
+        b, f = base[name], new[name]
+        report["checked"] += 1
+        b_us, f_us = float(b["us_per_call"]), float(f["us_per_call"])
+        if f_us > b_us * (1 + tol) and f_us - b_us > abs_floor_us:
+            report["regressions"].append(
+                (name, b_us, f_us, f_us / max(b_us, 1e-9)))
+        bd, fd = b.get("derived", {}), f.get("derived", {})
+        for key in STRUCTURAL_KEYS:
+            if key in bd or key in fd:
+                missing = object()
+                bv, fv = bd.get(key, missing), fd.get(key, missing)
+                if bv != fv:
+                    report["structural"].append(
+                        (name, key,
+                         None if bv is missing else bv,
+                         None if fv is missing else fv))
+    report["ok"] = not (report["regressions"] or report["structural"]
+                       or report["added"] or report["removed"])
+    return report
+
+
+def render(suite: str, report: dict, tol: float) -> str:
+    lines = [f"[gate] suite={suite}: {report['checked']} records checked "
+             f"(tol +{tol:.0%}, floor {ABS_FLOOR_US:.0f}us)"]
+    for name, b, f, ratio in report["regressions"]:
+        lines.append(f"  REGRESSION {name}: {b:.1f}us -> {f:.1f}us "
+                     f"({ratio:.2f}x > 1+{tol:.2f})")
+    for name, key, bv, fv in report["structural"]:
+        lines.append(f"  STRUCTURAL {name}: derived[{key!r}] "
+                     f"baseline={bv!r} fresh={fv!r} (exact match required)")
+    for name in report["added"]:
+        lines.append(f"  ADDED      {name}: not in baseline "
+                     f"(run --update-baselines to accept)")
+    for name in report["removed"]:
+        lines.append(f"  REMOVED    {name}: in baseline but not in fresh "
+                     f"run (deleted bench? run --update-baselines)")
+    lines.append(f"[gate] suite={suite}: "
+                 + ("OK" if report["ok"] else "FAIL"))
+    return "\n".join(lines)
+
+
+def baseline_path(suite: str) -> str:
+    return os.path.join(BENCH_DIR, f"BENCH_{suite}.json")
+
+
+def _run_suite_fresh(suite: str, out_dir: str) -> str:
+    """Regenerate a suite's artifact into ``out_dir`` (smoke geometry)."""
+    sys.path.insert(0, os.path.dirname(BENCH_DIR))  # repo root
+    try:
+        out = os.path.join(out_dir, f"BENCH_{suite}.json")
+        if suite == "kernels_smoke":
+            from benchmarks import kernel_bench
+            kernel_bench.run(quick=True, out=out)
+        elif suite == "serve":
+            from benchmarks import serve_bench
+            serve_bench.run(smoke=True, out=out)
+        else:
+            raise ValueError(
+                f"don't know how to regenerate suite {suite!r}; pass "
+                f"--fresh with a pre-generated BENCH_{suite}.json")
+        return out
+    finally:
+        sys.path.pop(0)
+
+
+def gate_suite(suite: str, fresh_path: Optional[str], tol: float,
+               update: bool, out_dir: str) -> Tuple[bool, str]:
+    bpath = baseline_path(suite)
+    if fresh_path is None:
+        fresh_path = _run_suite_fresh(suite, out_dir)
+    fresh = load_doc(fresh_path)
+    if fresh["suite"] != suite:
+        return False, (f"[gate] {fresh_path} is suite "
+                       f"{fresh['suite']!r}, expected {suite!r}")
+    if not os.path.exists(bpath):
+        if update:
+            shutil.copyfile(fresh_path, bpath)
+            return True, f"[gate] suite={suite}: new baseline {bpath}"
+        return False, (f"[gate] suite={suite}: no baseline at {bpath} "
+                       f"(run with --update-baselines to create it)")
+    report = compare(load_doc(bpath), fresh, tol=tol)
+    text = render(suite, report, tol)
+    if update and not report["ok"]:
+        shutil.copyfile(fresh_path, bpath)
+        text += f"\n[gate] suite={suite}: baseline updated <- {fresh_path}"
+        return True, text
+    return report["ok"], text
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff fresh benchmark output against committed "
+                    "BENCH_<suite>.json baselines")
+    ap.add_argument("--suite", action="append", default=None,
+                    help="suite(s) to gate (default: "
+                         + ", ".join(DEFAULT_SUITES) + ")")
+    ap.add_argument("--fresh", action="append", default=None,
+                    help="pre-generated fresh BENCH json (one per --suite, "
+                         "same order); omitted = run the suite now")
+    ap.add_argument("--tol", type=float, default=0.75,
+                    help="relative us_per_call tolerance (default 0.75 = "
+                         "+75%%, sized for shared-CPU CI noise)")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="accept the fresh results as the new baselines")
+    ap.add_argument("--out-dir", default="/tmp/repro_bench",
+                    help="where regenerated fresh artifacts land")
+    args = ap.parse_args(argv)
+
+    suites = args.suite or list(DEFAULT_SUITES)
+    fresh = args.fresh or [None] * len(suites)
+    if len(fresh) != len(suites):
+        print(f"[gate] {len(suites)} --suite but {len(fresh)} --fresh",
+              file=sys.stderr)
+        return 2
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    ok = True
+    for suite, fpath in zip(suites, fresh):
+        try:
+            suite_ok, text = gate_suite(suite, fpath, args.tol,
+                                        args.update_baselines, args.out_dir)
+        except (OSError, ValueError) as e:
+            print(f"[gate] suite={suite}: ERROR {e}", file=sys.stderr)
+            return 2
+        print(text)
+        ok &= suite_ok
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,7 +24,7 @@ from repro.quant.ptq import unpack_conv_codes
 HBM_BW = 819e9
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, out: str | None = None):
     reset_records()
     print("# --- kernel microbench (jnp backend on host CPU) ---")
     m, k, n = (256, 1024, 1024) if quick else (512, 2048, 2048)
@@ -186,9 +186,27 @@ def run(quick: bool = False):
             sp_conv, qct_small, leak_shift=3, threshold_q=64)
     print("  pallas interpret spot-check at bench shapes: OK")
 
-    # quick-mode shapes are not comparable across PRs — never clobber the
-    # committed trajectory artifact with them
-    if quick:
-        print("  --quick: skipping BENCH_kernels.json (full shapes only)")
-    else:
-        write_json("kernels")
+    # quick/smoke shapes are not comparable with the full-shape artifact,
+    # so they get their own suite file (BENCH_kernels_smoke.json) instead
+    # of clobbering BENCH_kernels.json — both are committed baselines;
+    # the CI bench-gate leg diffs the smoke one (cheap enough to rerun
+    # per PR), benchmarks/gate.py handles either.
+    write_json("kernels_smoke" if quick else "kernels", path=out)
+
+
+def main():
+    import argparse
+
+    from repro.configs import add_geometry_flags
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    add_geometry_flags(ap)
+    ap.add_argument("--out", default=None,
+                    help="write BENCH json here instead of the committed "
+                         "baseline path (what the CI gate leg does)")
+    args = ap.parse_args()
+    run(quick=args.smoke, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,12 @@ for:
                        trained on the synthetic vision task)
   latency_energy     — paper §III-D CPU/GPU comparison (analytical)
   kernel_bench       — Pallas-kernel hot spots + packed-bandwidth roofline
+  serve_bench        — deploy/serve path (BENCH_serve.json)
   roofline_report    — per (arch x shape) roofline terms from the dry-run
+  predicted_report   — model-vs-measured join -> BENCH_predicted.json
+
+The kernels/serve/predicted suites write committed ``BENCH_*.json``
+artifacts; ``benchmarks/gate.py`` diffs fresh runs against them.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 """
@@ -16,7 +21,6 @@ Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 
@@ -30,7 +34,9 @@ def main() -> None:
         fig45_quantization,
         kernel_bench,
         latency_energy,
+        predicted_report,
         roofline_report,
+        serve_bench,
         table1_neuron,
         table2_system,
     )
@@ -41,14 +47,17 @@ def main() -> None:
         "fig45": fig45_quantization.run,
         "latency": latency_energy.run,
         "kernels": kernel_bench.run,
+        "serve": lambda quick: serve_bench.run(smoke=quick),
         "roofline": roofline_report.run,
+        # last: joins the fresh kernels/serve artifacts with the perfmodel
+        "predicted": lambda quick: predicted_report.run(quick=quick),
     }
     picked = {args.only: suites[args.only]} if args.only else suites
-    t0 = time.time()
+    t0 = time.perf_counter()
     for name, fn in picked.items():
         print(f"\n=== {name} ===", flush=True)
         fn(quick=args.quick)
-    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+    print(f"\nall benchmarks done in {time.perf_counter()-t0:.0f}s")
 
 
 if __name__ == "__main__":

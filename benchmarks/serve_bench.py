@@ -11,90 +11,112 @@ Measures what the deploy subsystem buys on the serving path:
                        compile counts (zero recompiles after warmup)
 
 Emits CSV lines via bench_lib and writes ``BENCH_serve.json`` next to
-this file.  Run:  PYTHONPATH=src python benchmarks/serve_bench.py --smoke
+this file (``BENCH_serve_full.json`` under ``--full``, so paper-size
+runs never clobber the smoke-geometry baseline the CI gate diffs).
+Run:  PYTHONPATH=src python benchmarks/serve_bench.py --smoke
 """
 
 from __future__ import annotations
 
-import argparse
 import time
 
-import jax
-import numpy as np
+try:                       # `python benchmarks/serve_bench.py` (script) …
+    import bench_lib
+except ImportError:        # … or `from benchmarks import serve_bench`
+    from benchmarks import bench_lib
 
-import bench_lib
 
-from repro.configs import add_geometry_flags  # noqa: E402
+def run(smoke: bool = True, model: str = "vgg9", requests: int = 24,
+        max_batch: int = 8, out: str | None = None) -> str:
+    import jax
+    import numpy as np
 
-ap = argparse.ArgumentParser()
-add_geometry_flags(ap)
-ap.add_argument("--model", default="vgg9",
-                choices=("vgg9", "vgg16", "resnet18"))
-ap.add_argument("--requests", type=int, default=24)
-ap.add_argument("--max-batch", type=int, default=8)
-args = ap.parse_args()
+    from repro.deploy import (
+        SNNEngineConfig, SNNRequest, SNNServeEngine, deploy, deploy_config,
+    )
+    from repro.models import snn_cnn
 
-from repro.deploy import (                                   # noqa: E402
-    SNNEngineConfig, SNNRequest, SNNServeEngine, deploy, deploy_config,
-)
-from repro.models import snn_cnn                             # noqa: E402
+    bench_lib.reset_records()      # suites must not inherit stale records
+    print("name,us_per_call,derived")
+    for bits in (2, 4, 8):
+        cfg = deploy_config(model, bits, smoke=smoke)
+        params = snn_cnn.init(jax.random.PRNGKey(0), cfg)
+        images = np.asarray(
+            np.random.default_rng(0).random(
+                (4, cfg.img_size, cfg.img_size, cfg.in_channels)),
+            np.float32)
 
-print("name,us_per_call,derived")
-for bits in (2, 4, 8):
-    cfg = deploy_config(args.model, bits, smoke=args.smoke)
-    params = snn_cnn.init(jax.random.PRNGKey(0), cfg)
-    images = np.asarray(
-        np.random.default_rng(0).random(
-            (4, cfg.img_size, cfg.img_size, cfg.in_channels)),
-        np.float32)
+        t0 = time.perf_counter()
+        packed = deploy(params, cfg)
+        jax.block_until_ready([lp.qt.data for lp in packed.layers.values()])
+        deploy_ms = (time.perf_counter() - t0) * 1e3
 
-    t0 = time.perf_counter()
-    model = deploy(params, cfg)
-    jax.block_until_ready([lp.qt.data for lp in model.layers.values()])
-    deploy_ms = (time.perf_counter() - t0) * 1e3
+        percall = jax.jit(
+            lambda p, x, cfg=cfg: snn_cnn.apply(p, cfg, x))
+        packaged = jax.jit(
+            lambda m, x: m.apply(x))
+        us_percall = bench_lib.time_call(percall, params, images)
+        us_packaged = bench_lib.time_call(packaged, packed, images)
+        bench_lib.emit(
+            f"snn_forward/{model}/w{bits}/percall", us_percall,
+            f"bits={bits};layers={len(packed.layers)}")
+        bench_lib.emit(
+            f"snn_forward/{model}/w{bits}/packaged", us_packaged,
+            f"bits={bits};deploy_ms={deploy_ms:.1f}"
+            f";speedup={us_percall / max(us_packaged, 1e-9):.2f}x"
+            f";packed_mb={packed.nbytes_packed() / 1e6:.3f}"
+            f";compression={packed.compression_ratio():.1f}x")
 
-    percall = jax.jit(
-        lambda p, x: snn_cnn.apply(p, cfg, x))
-    packaged = jax.jit(
-        lambda m, x: m.apply(x))
-    us_percall = bench_lib.time_call(percall, params, images)
-    us_packaged = bench_lib.time_call(packaged, model, images)
-    bench_lib.emit(
-        f"snn_forward/{args.model}/w{bits}/percall", us_percall,
-        f"bits={bits};layers={len(model.layers)}")
-    bench_lib.emit(
-        f"snn_forward/{args.model}/w{bits}/packaged", us_packaged,
-        f"bits={bits};deploy_ms={deploy_ms:.1f}"
-        f";speedup={us_percall / max(us_packaged, 1e-9):.2f}x"
-        f";packed_mb={model.nbytes_packed() / 1e6:.3f}"
-        f";compression={model.compression_ratio():.1f}x")
+        # mixed-size request stream through the bucket-cached engine
+        eng = SNNServeEngine(packed, SNNEngineConfig(max_batch=max_batch))
+        eng.warmup()
+        warm_compiles = eng.compile_count
+        rng = np.random.default_rng(bits)
+        uid = 0
+        t0 = time.perf_counter()
+        while uid < requests:
+            burst = int(rng.integers(1, max_batch + 1))
+            for _ in range(min(burst, requests - uid)):
+                eng.add_request(SNNRequest(
+                    uid=uid,
+                    image=rng.random((cfg.img_size, cfg.img_size,
+                                      cfg.in_channels)).astype(np.float32)))
+                uid += 1
+            eng.step()
+        stats = eng.run_until_done(max_steps=requests)
+        wall = time.perf_counter() - t0
+        recompiles = eng.compile_count - warm_compiles
+        assert recompiles == 0, f"recompiled after warmup: {recompiles}"
+        bench_lib.emit(
+            f"snn_serve/{model}/w{bits}", 1e6 * wall / stats["requests"],
+            f"bits={bits};images_per_s={stats['requests'] / wall:.1f}"
+            f";batches={stats['batches']};compiles={stats['compiles']}"
+            f";recompiles_after_warmup={recompiles}"
+            f";latency_p50_ms={stats['latency_p50_ms']:.2f}"
+            f";latency_p95_ms={stats['latency_p95_ms']:.2f}")
 
-    # mixed-size request stream through the bucket-cached engine
-    eng = SNNServeEngine(model, SNNEngineConfig(max_batch=args.max_batch))
-    eng.warmup()
-    warm_compiles = eng.compile_count
-    rng = np.random.default_rng(bits)
-    uid = 0
-    t0 = time.perf_counter()
-    while uid < args.requests:
-        burst = int(rng.integers(1, args.max_batch + 1))
-        for _ in range(min(burst, args.requests - uid)):
-            eng.add_request(SNNRequest(
-                uid=uid,
-                image=rng.random((cfg.img_size, cfg.img_size,
-                                  cfg.in_channels)).astype(np.float32)))
-            uid += 1
-        eng.step()
-    stats = eng.run_until_done()
-    wall = time.perf_counter() - t0
-    recompiles = eng.compile_count - warm_compiles
-    assert recompiles == 0, f"recompiled after warmup: {recompiles}"
-    bench_lib.emit(
-        f"snn_serve/{args.model}/w{bits}", 1e6 * wall / stats["requests"],
-        f"bits={bits};images_per_s={stats['requests'] / wall:.1f}"
-        f";batches={stats['batches']};compiles={stats['compiles']}"
-        f";recompiles_after_warmup={recompiles}"
-        f";latency_p50_ms={stats['latency_p50_ms']:.2f}"
-        f";latency_p95_ms={stats['latency_p95_ms']:.2f}")
+    return bench_lib.write_json("serve" if smoke else "serve_full",
+                                path=out)
 
-bench_lib.write_json("serve")
+
+def main():
+    import argparse
+
+    from repro.configs import add_geometry_flags
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    add_geometry_flags(ap)
+    ap.add_argument("--model", default="vgg9",
+                    choices=("vgg9", "vgg16", "resnet18"))
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--out", default=None,
+                    help="write BENCH json here instead of the committed "
+                         "baseline path (what the CI gate leg does)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, model=args.model, requests=args.requests,
+        max_batch=args.max_batch, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

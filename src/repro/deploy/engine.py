@@ -168,7 +168,10 @@ class SNNServeEngine:
         if tuple(req.image.shape) != want:
             raise ValueError(f"request {req.uid}: image shape "
                              f"{tuple(req.image.shape)} != model {want}")
-        req._t0 = time.time()
+        # perf_counter, NOT time.time(): latency deltas must come from a
+        # monotonic clock — a wall-clock step (NTP slew, DST) would
+        # corrupt p50/p95/max and flap the benchmark gate
+        req._t0 = time.perf_counter()
         self.queue.append(req)
 
     # -- main loop -----------------------------------------------------------
@@ -190,15 +193,15 @@ class SNNServeEngine:
                            self.cfg.in_channels), np.float32)
         for i, req in enumerate(batch):
             images[i] = req.image
-        t0 = time.time()
+        t0 = time.perf_counter()
         logits = exe(self.model, jnp.asarray(images))
         logits = np.asarray(jax.block_until_ready(logits))
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         self.per_bucket[bucket] = self.per_bucket.get(bucket, 0) + 1
         self.total_batches += 1
         self.total_compute_s += dt
 
-        now = time.time()
+        now = time.perf_counter()
         for i, req in enumerate(batch):
             req.image = None        # consumed — don't retain every input
             req.logits = logits[i]
@@ -224,6 +227,14 @@ class SNNServeEngine:
             if not self.queue:
                 break
             self.step()
+        if self.queue:
+            # returning normally here would silently truncate the stream:
+            # throughput/latency stats would cover only the served prefix
+            # while looking complete
+            raise RuntimeError(
+                f"run_until_done: {len(self.queue)} requests still queued "
+                f"after max_steps={max_steps} — raise max_steps or drain "
+                f"with step()")
         return self.stats()
 
     # -- accounting ----------------------------------------------------------

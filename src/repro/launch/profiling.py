@@ -1,0 +1,54 @@
+"""Opt-in ``jax.profiler`` tracing for the serve/train hot loops.
+
+The tuning knobs this repo exposes (engine batch buckets, fused-kernel
+bm/bn tiles) should be set from traces, not guesses: wrap the hot loop
+in :func:`maybe_trace` and point TensorBoard (or ui.perfetto.dev) at the
+trace directory to see per-op device time, compile events, and host
+gaps.  Launchers expose it as ``--profile [DIR]``:
+
+    PYTHONPATH=src python -m repro.launch.serve_snn --profile
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \
+        --profile /tmp/repro_trace/train
+
+Disabled (``log_dir`` falsy) it is a zero-overhead no-op, so call sites
+wrap unconditionally.  Warmup/compile happens inside the traced window
+on the first step — the trace viewer separates XlaCompile events from
+steady-state steps, which is exactly the split the tuning loop needs.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, Optional
+
+
+@contextlib.contextmanager
+def maybe_trace(log_dir: Optional[str]) -> Iterator[Optional[str]]:
+    """``jax.profiler.trace(log_dir)`` when ``log_dir`` is set, else no-op.
+
+    Yields the directory being traced into (or None), and prints where
+    the trace landed on exit so the launcher output tells you what to
+    open.
+    """
+    if not log_dir:
+        yield None
+        return
+    import jax
+
+    with jax.profiler.trace(log_dir):
+        yield log_dir
+    print(f"[profile] trace written to {log_dir} — open with "
+          f"`tensorboard --logdir {log_dir}` (Profile tab) or perfetto")
+
+
+def add_profile_flag(ap, default_dir: str) -> None:
+    """The shared ``--profile [DIR]`` launcher flag.
+
+    Bare ``--profile`` traces into ``default_dir``; an explicit argument
+    overrides the destination; omitted entirely, ``args.profile`` is
+    None and :func:`maybe_trace` is a no-op.
+    """
+    ap.add_argument("--profile", nargs="?", const=default_dir, default=None,
+                    metavar="DIR",
+                    help="trace the hot loop with jax.profiler into DIR "
+                         f"(default {default_dir}) for TensorBoard/perfetto")

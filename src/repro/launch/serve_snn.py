@@ -14,6 +14,7 @@ import argparse
 
 def main():
     from repro.configs import add_geometry_flags
+    from repro.launch.profiling import add_profile_flag, maybe_trace
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="vgg9",
@@ -30,6 +31,7 @@ def main():
     ap.add_argument("--show-graph", action="store_true",
                     help="print the declarative model graph (the one "
                          "topology the train/int/packaged lowerings share)")
+    add_profile_flag(ap, "/tmp/repro_trace/serve_snn")
     args = ap.parse_args()
 
     import time
@@ -47,9 +49,10 @@ def main():
     if args.show_graph:
         print(cfg.graph().summary())
     params = snn_cnn.init(jax.random.PRNGKey(0), cfg)
-    t0 = time.time()
+    t0 = time.perf_counter()
     model = deploy(params, cfg)
-    print(f"packed {cfg.model} W{args.bits} in {time.time() - t0:.2f}s: "
+    print(f"packed {cfg.model} W{args.bits} in "
+          f"{time.perf_counter() - t0:.2f}s: "
           f"{len(model.layers)} layers, "
           f"{model.nbytes_packed() / 1e6:.2f} MB packed "
           f"({model.compression_ratio():.1f}x vs fp32)")
@@ -69,9 +72,10 @@ def main():
             uid=uid,
             image=rng.random((cfg.img_size, cfg.img_size,
                               cfg.in_channels)).astype(np.float32)))
-    t0 = time.time()
-    eng.run_until_done()
-    stats = eng.stats(wall_s=time.time() - t0)
+    t0 = time.perf_counter()
+    with maybe_trace(args.profile):
+        eng.run_until_done(max_steps=args.requests)
+    stats = eng.stats(wall_s=time.perf_counter() - t0)
     print(f"served {stats['requests']} requests in {stats['wall_s']:.2f}s "
           f"({stats['images_per_s']:.1f} img/s, "
           f"{stats['batches']} batches, {stats['compiles']} compiles, "

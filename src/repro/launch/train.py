@@ -27,6 +27,9 @@ def main():
                     help="L-SPINE spiking execution of FFN blocks")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--resume", action="store_true")
+    from repro.launch.profiling import add_profile_flag, maybe_trace
+
+    add_profile_flag(ap, "/tmp/repro_trace/train")
     args = ap.parse_args()
 
     import dataclasses
@@ -55,7 +58,8 @@ def main():
         import shutil
         shutil.rmtree(args.ckpt_dir, ignore_errors=True)
     trainer = Trainer(cfg, tcfg)
-    out = trainer.run()
+    with maybe_trace(args.profile):
+        out = trainer.run()
     print(f"first loss {out['first_loss']:.4f} -> "
           f"final loss {out['final_loss']:.4f}")
 

@@ -33,6 +33,18 @@ LINK_BW = 50e9
 
 RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
 
+# Tie-break priority for the dominant roofline term.  ``max()`` returns
+# the FIRST maximal element, so equal times resolve compute > memory >
+# collective — deterministically, not by whatever tuple fallthrough
+# (e.g. string comparison of the labels) happens to order them.
+_BOTTLENECK_PRIORITY = ("compute", "memory", "collective")
+
+
+def pick_bottleneck(t_comp: float, t_mem: float, t_coll: float) -> str:
+    """Name of the dominant term, ties broken by _BOTTLENECK_PRIORITY."""
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    return max(_BOTTLENECK_PRIORITY, key=lambda k: terms[k])
+
 
 def override_depth(cfg, n_layers: int):
     """Clone cfg at a reduced depth (layer-pattern safe)."""
@@ -164,7 +176,6 @@ def roofline_cell(arch: str, shape_name: str, *, multi_pod=False,
     n_act = cfg.active_params()
     model_flops = (6 if shape.kind == "train" else 2) * n_act * toks
 
-    dom = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))
     rec.update(
         ok=True,
         hlo_flops_global=float(flops),
@@ -174,7 +185,7 @@ def roofline_cell(arch: str, shape_name: str, *, multi_pod=False,
         coll_bytes_per_device=diff["coll_bytes_per_device"],
         coll_breakdown=diff["coll_breakdown"],
         compute_s=t_comp, memory_s=t_mem, collective_s=t_coll,
-        bottleneck=dom[1],
+        bottleneck=pick_bottleneck(t_comp, t_mem, t_coll),
         step_s_lower_bound=max(t_comp, t_mem, t_coll),
         roofline_fraction=float(
             t_comp / max(t_comp, t_mem, t_coll, 1e-30)),

@@ -101,7 +101,9 @@ class ServeEngine:
         for slot in range(self.ecfg.slots):
             if self.slot_req[slot] is None and self.queue:
                 req = self.queue.popleft()
-                req._t0 = time.time()
+                # perf_counter, NOT time.time(): latency deltas need a
+                # monotonic clock (a wall-clock step corrupts them)
+                req._t0 = time.perf_counter()
                 toks = jnp.asarray(req.prompt[None, :], jnp.int32)
                 logits, pcache = self._prefill1(self.params, toks)
                 self._write_slot_cache(slot, pcache, len(req.prompt))
@@ -110,7 +112,7 @@ class ServeEngine:
                 # the prefill-produced first token may itself be EOS
                 if ((req.eos_id is not None and tok == req.eos_id)
                         or req.max_new_tokens <= 1):
-                    req.latency_s = time.time() - req._t0
+                    req.latency_s = time.perf_counter() - req._t0
                     self.done[req.uid] = req
                     continue
                 self.slot_req[slot] = req
@@ -145,13 +147,13 @@ class ServeEngine:
             hit_eos = req.eos_id is not None and tok == req.eos_id
             if (self.slot_pos[slot] >= req.max_new_tokens or hit_eos
                     or self.slot_len[slot] >= self.ecfg.max_len):
-                req.latency_s = time.time() - req._t0
+                req.latency_s = time.perf_counter() - req._t0
                 self.done[req.uid] = req
                 self.slot_req[slot] = None
         return len([r for r in self.slot_req if r is not None])
 
     def run_until_done(self, max_steps: int = 10_000) -> dict:
-        t0 = time.time()
+        t0 = time.perf_counter()
         n_decode = 0
         for _ in range(max_steps):
             self._admit()
@@ -159,12 +161,17 @@ class ServeEngine:
                 break
             n_decode += 1
             self.step()
-        wall = time.time() - t0
+        wall = time.perf_counter() - t0
         toks = sum(len(r.output or []) for r in self.done.values())
+        # max_steps exhausted with work left = truncated stream; flag it
+        # so throughput numbers are never mistaken for a full drain
+        incomplete = bool(self.queue) or any(
+            r is not None for r in self.slot_req)
         return {
             "requests": len(self.done),
             "generated_tokens": toks,
             "wall_s": wall,
             "tokens_per_s": toks / max(wall, 1e-9),
             "decode_steps": n_decode,
+            "incomplete": incomplete,
         }

@@ -100,12 +100,15 @@ class Trainer:
             batch = next(it)
             if self.injector is not None:
                 self.injector.check(step)
-            t0 = time.time()
+            # perf_counter, NOT time.time(): step durations feed the
+            # watchdog's straggler detection — a wall-clock step would
+            # fire (or mask) it spuriously
+            t0 = time.perf_counter()
             batch = jax.tree.map(lambda x: jax.numpy.asarray(x), batch)
             params, opt_state, metrics = self._step_fn(
                 params, opt_state, batch)
             loss = float(metrics["loss"])
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             verdict = self.watchdog.observe(step, dt)
             losses.append(loss)
             self.history.append({"step": step, "loss": loss, "dt": dt,

@@ -1,0 +1,307 @@
+"""Perf-trajectory gate: comparator, registry hygiene, predicted join.
+
+The contract under test (ISSUE 6):
+
+  * the gate passes on identical baselines, fails on an injected
+    ``us_per_call`` regression beyond tolerance, reports added/removed
+    records explicitly, and ``--update-baselines`` roundtrips;
+  * structural derived keys (compile counts, byte totals) are exact;
+  * bench_lib's registry is snapshot-and-reset on write (no cross-suite
+    bleed) and its median is a true median for even iteration counts;
+  * the predicted-vs-measured join produces neuron + system rows and
+    joins measured records by name;
+  * engine/trainer timing never goes through non-monotonic
+    ``time.time()`` (a wall-clock step must not flap the gate).
+"""
+
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))  # repo root -> `benchmarks` importable
+
+from benchmarks import bench_lib, gate, predicted_report  # noqa: E402
+
+
+def doc(records, suite="serve"):
+    return {"suite": suite, "backend": "cpu", "device": "x86_64",
+            "records": records}
+
+
+def rec(name, us, **derived):
+    return {"name": name, "us_per_call": us, "derived": derived}
+
+
+BASE = doc([
+    rec("snn_serve/vgg9/w2", 8000.0, bits=2, compiles=4,
+        recompiles_after_warmup=0, images_per_s=120.0),
+    rec("snn_forward/vgg9/w2/packaged", 12000.0, bits=2, speedup=1.1),
+])
+
+
+# ---------------------------------------------------------------------------
+# comparator
+# ---------------------------------------------------------------------------
+
+def test_identical_baseline_passes():
+    report = gate.compare(BASE, copy.deepcopy(BASE))
+    assert report["ok"]
+    assert report["checked"] == 2
+    assert not (report["regressions"] or report["structural"]
+                or report["added"] or report["removed"])
+
+
+def test_2x_regression_fails():
+    fresh = copy.deepcopy(BASE)
+    fresh["records"][0]["us_per_call"] *= 2.0
+    report = gate.compare(BASE, fresh, tol=0.75)
+    assert not report["ok"]
+    [(name, b, f, ratio)] = report["regressions"]
+    assert name == "snn_serve/vgg9/w2"
+    assert ratio == pytest.approx(2.0)
+
+
+def test_regression_within_tolerance_passes():
+    fresh = copy.deepcopy(BASE)
+    fresh["records"][0]["us_per_call"] *= 1.5   # +50% < +75% default tol
+    assert gate.compare(BASE, fresh, tol=0.75)["ok"]
+
+
+def test_speedups_never_fail():
+    fresh = copy.deepcopy(BASE)
+    for r in fresh["records"]:
+        r["us_per_call"] *= 0.1
+    assert gate.compare(BASE, fresh)["ok"]
+
+
+def test_absolute_floor_swallows_micro_jitter():
+    base = doc([rec("kernel/tiny", 20.0)])
+    fresh = doc([rec("kernel/tiny", 100.0)])   # 5x, but +80us < 200us floor
+    assert gate.compare(base, fresh, tol=0.75)["ok"]
+    fresh = doc([rec("kernel/tiny", 500.0)])   # above the floor too
+    assert not gate.compare(base, fresh, tol=0.75)["ok"]
+
+
+def test_structural_keys_exact():
+    fresh = copy.deepcopy(BASE)
+    fresh["records"][0]["derived"]["recompiles_after_warmup"] = 1
+    report = gate.compare(BASE, fresh)
+    assert not report["ok"]
+    assert ("snn_serve/vgg9/w2", "recompiles_after_warmup", 0, 1) \
+        in report["structural"]
+    # ...while measured keys are informational, any drift allowed
+    fresh = copy.deepcopy(BASE)
+    fresh["records"][0]["derived"]["images_per_s"] = 1.0
+    assert gate.compare(BASE, fresh)["ok"]
+
+
+def test_added_and_removed_records_reported():
+    fresh = copy.deepcopy(BASE)
+    fresh["records"].pop(1)
+    fresh["records"].append(rec("snn_serve/vgg9/w4", 9000.0))
+    report = gate.compare(BASE, fresh)
+    assert not report["ok"]
+    assert report["added"] == ["snn_serve/vgg9/w4"]
+    assert report["removed"] == ["snn_forward/vgg9/w2/packaged"]
+    text = gate.render("serve", report, 0.75)
+    assert "ADDED" in text and "REMOVED" in text and "FAIL" in text
+
+
+def test_duplicate_record_names_rejected():
+    bad = doc([rec("a", 1.0), rec("a", 2.0)])
+    with pytest.raises(ValueError, match="duplicate"):
+        gate.compare(bad, doc([]))
+
+
+# ---------------------------------------------------------------------------
+# CLI: exit codes + --update-baselines roundtrip
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def gated(tmp_path, monkeypatch):
+    """Sandbox the gate onto tmp baselines; returns (write_doc, run)."""
+    monkeypatch.setattr(gate, "BENCH_DIR", str(tmp_path))
+
+    def write_doc(name, d):
+        p = tmp_path / name
+        p.write_text(json.dumps(d))
+        return str(p)
+
+    def run(*argv):
+        return gate.main(list(argv))
+
+    return write_doc, run
+
+
+def test_main_zero_on_identical(gated):
+    write_doc, run = gated
+    write_doc("BENCH_serve.json", BASE)
+    fresh = write_doc("fresh.json", BASE)
+    assert run("--suite", "serve", "--fresh", fresh) == 0
+
+
+def test_main_nonzero_on_injected_regression(gated):
+    write_doc, run = gated
+    write_doc("BENCH_serve.json", BASE)
+    worse = copy.deepcopy(BASE)
+    worse["records"][0]["us_per_call"] *= 2.0
+    fresh = write_doc("fresh.json", worse)
+    assert run("--suite", "serve", "--fresh", fresh) == 1
+
+
+def test_main_update_baselines_roundtrips(gated, tmp_path):
+    write_doc, run = gated
+    write_doc("BENCH_serve.json", BASE)
+    changed = copy.deepcopy(BASE)
+    changed["records"][0]["us_per_call"] *= 3.0
+    changed["records"].append(rec("snn_serve/vgg9/w4", 9000.0))
+    fresh = write_doc("fresh.json", changed)
+    assert run("--suite", "serve", "--fresh", fresh) == 1
+    assert run("--suite", "serve", "--fresh", fresh,
+               "--update-baselines") == 0
+    # the accepted fresh doc IS the new baseline, bit for bit
+    assert json.loads((tmp_path / "BENCH_serve.json").read_text()) == changed
+    assert run("--suite", "serve", "--fresh", fresh) == 0
+
+
+def test_main_errors_on_suite_mismatch_and_missing(gated):
+    write_doc, run = gated
+    write_doc("BENCH_serve.json", BASE)
+    fresh = write_doc("fresh.json", doc([], suite="kernels"))
+    assert run("--suite", "serve", "--fresh", fresh) == 1
+    assert run("--suite", "serve", "--fresh", "/nonexistent.json") == 2
+    # no baseline yet and no --update-baselines: fail, don't invent one
+    fresh2 = write_doc("fresh2.json", doc([], suite="kernels_smoke"))
+    assert run("--suite", "kernels_smoke", "--fresh", fresh2) == 1
+
+
+# ---------------------------------------------------------------------------
+# bench_lib: median + registry hygiene
+# ---------------------------------------------------------------------------
+
+def test_median_even_and_odd():
+    assert bench_lib.median([3.0, 1.0, 2.0]) == 2.0
+    # even n: mean of the two middle values, NOT the upper one
+    assert bench_lib.median([1.0, 2.0, 3.0, 4.0]) == 2.5
+    assert bench_lib.median([4.0, 1.0]) == 2.5
+    with pytest.raises(ValueError):
+        bench_lib.median([])
+
+
+def test_time_call_even_iters_true_median(monkeypatch):
+    ticks = iter([0.0, 10.0,    # iter 1: 10s
+                  10.0, 12.0,   # iter 2: 2s
+                  12.0, 16.0,   # iter 3: 4s
+                  16.0, 22.0])  # iter 4: 6s
+    monkeypatch.setattr(bench_lib.jax, "block_until_ready", lambda x: x)
+    monkeypatch.setattr(bench_lib.time, "perf_counter",
+                        lambda: next(ticks))
+    us = bench_lib.time_call(lambda: 0, warmup=0, iters=4)
+    assert us == pytest.approx(5e6)   # median(2,4,6,10) = 5s
+
+
+def test_write_json_snapshot_and_reset(tmp_path):
+    bench_lib.reset_records()
+    bench_lib.emit("suite_a/x", 1.0, "k=1")
+    path_a = bench_lib.write_json("a", path=str(tmp_path / "a.json"))
+    # registry drained: a second suite in the same process starts clean
+    bench_lib.emit("suite_b/y", 2.0)
+    path_b = bench_lib.write_json("b", path=str(tmp_path / "b.json"))
+    a = json.loads(open(path_a).read())
+    b = json.loads(open(path_b).read())
+    assert [r["name"] for r in a["records"]] == ["suite_a/x"]
+    assert [r["name"] for r in b["records"]] == ["suite_b/y"]   # no bleed
+    assert a["records"][0]["derived"] == {"k": 1}
+
+
+# ---------------------------------------------------------------------------
+# predicted-vs-measured join
+# ---------------------------------------------------------------------------
+
+def test_predicted_join_on_synthetic_records(tmp_path):
+    kernels = doc([
+        rec("kernel/lif_step_fused", 2000.0, bytes=12713984),
+        rec("kernel/nce_rollout_unfused_w2", 300000.0, T=8,
+            hbm_bytes=33816576),
+        rec("kernel/nce_rollout_fused_w2", 290000.0, T=8,
+            hbm_bytes=1835008, v5e_traffic_ratio=18.4),
+    ], suite="kernels")
+    serve = doc([
+        rec("snn_forward/vgg9/w4/packaged", 11000.0, bits=4),
+    ], suite="serve")
+    kp = tmp_path / "k.json"
+    sp = tmp_path / "s.json"
+    kp.write_text(json.dumps(kernels))
+    sp.write_text(json.dumps(serve))
+
+    out = str(tmp_path / "BENCH_predicted.json")
+    predicted_report.run(out=out, kernels_path=str(kp), serve_path=str(sp))
+    rows = {r["row"]: r for r in json.loads(open(out).read())["rows"]}
+
+    # neuron table: all three precisions, INT8 anchored to the paper
+    for bits in (2, 4, 8):
+        assert f"neuron/int{bits}" in rows
+    anchor = rows["neuron/int8"]
+    assert anchor["paper"]["luts"] == 459
+    assert abs(anchor["rel_err"]["luts"]) < 0.01      # calibration anchor
+    assert rows["neuron/int2"]["predicted"]["lanes"] == 16
+
+    # system table: model rows + paper-published engine latencies
+    assert rows["system/ref_workload_int8"]["paper"]["latency_ms"] == 2.38
+    assert abs(rows["system/ref_workload_int8"]["rel_err"]["latency_ms"]) \
+        < 0.01
+    v16 = rows["system/vgg16_int2_latency"]
+    assert v16["paper"]["engine_ms"] == pytest.approx(4.83, abs=0.01)
+
+    # measured joins come from the synthetic records by name
+    lif = rows["neuron/lif_step_software"]
+    assert lif["measured"]["host_us"] == 2000.0
+    twin = rows["system/vgg9_w4_software_twin"]
+    assert twin["measured"]["host_us_packaged"] == 11000.0
+    assert twin["predicted"]["engine_ms"] > 0
+    fusion = rows["fusion/nce_rollout_w2"]
+    assert fusion["predicted"]["v5e_traffic_ratio"] == 18.4
+    assert fusion["measured"]["host_parity_x"] == pytest.approx(1.03, 0.01)
+    roof = rows["roofline/nce_rollout_fused_w2"]
+    assert roof["measured"]["host_us"] == 290000.0
+    assert roof["predicted"]["v5e_mem_us"] == round(
+        1835008 / 819e9 * 1e6, 1)
+
+
+def test_predicted_join_tolerates_missing_bench_files(tmp_path):
+    out = str(tmp_path / "p.json")
+    predicted_report.run(out=out,
+                         kernels_path=str(tmp_path / "missing_k.json"),
+                         serve_path=str(tmp_path / "missing_s.json"))
+    rows = {r["row"] for r in json.loads(open(out).read())["rows"]}
+    # model-only rows survive; measured joins are simply absent
+    assert "neuron/int2" in rows and "system/ref_workload_int8" in rows
+    assert "neuron/lif_step_software" not in rows
+
+
+# ---------------------------------------------------------------------------
+# monotonic-clock regression pin (the bug that motivated this PR)
+# ---------------------------------------------------------------------------
+
+def test_no_wall_clock_on_timing_paths():
+    """Latency accounting in the engines/trainer must use perf_counter —
+    time.time() is step-adjusted (NTP/DST) and corrupts p50/p95/max,
+    which would flap the benchmark gate."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    timing_modules = [
+        "src/repro/deploy/engine.py",
+        "src/repro/serve/engine.py",
+        "src/repro/train/trainer.py",
+        "benchmarks/bench_lib.py",
+        "benchmarks/serve_bench.py",
+    ]
+    for mod in timing_modules:
+        for i, line in enumerate(
+                open(os.path.join(root, mod)), start=1):
+            code = line.split("#", 1)[0]   # comments may NAME the bug
+            assert "time.time()" not in code, \
+                f"{mod}:{i} uses non-monotonic time.time() on a timing path"

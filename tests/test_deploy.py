@@ -242,6 +242,58 @@ def test_engine_bucket_resolution():
     assert SNNEngineConfig(buckets=(3, 5)).resolved_buckets(2) == (4, 6)
 
 
+def test_engine_run_until_done_raises_on_truncation(packed_model):
+    """Exhausting max_steps with requests still queued must raise, not
+    return stats that silently cover only the served prefix."""
+    cfg = packed_model.cfg
+    eng = SNNServeEngine(packed_model, SNNEngineConfig(max_batch=1,
+                                                       buckets=(1,)))
+    rng = np.random.default_rng(3)
+    for uid in range(3):
+        eng.add_request(SNNRequest(
+            uid=uid, image=rng.random(
+                (cfg.img_size, cfg.img_size, cfg.in_channels)
+            ).astype(np.float32)))
+    with pytest.raises(RuntimeError, match="still queued"):
+        eng.run_until_done(max_steps=1)
+    # the drained remainder completes normally
+    stats = eng.run_until_done()
+    assert stats["requests"] == 3
+
+
+def test_engine_latency_survives_wall_clock_step(packed_model, monkeypatch):
+    """Latency accounting must come from a monotonic clock: a simulated
+    wall-clock step (NTP slew / DST) between enqueue and completion must
+    not produce negative or hour-scale latencies."""
+    import time as time_mod
+
+    wall = iter([1e9, 1e9 - 3600.0, 1e9 - 7200.0])  # clock stepping BACK
+
+    def jumping_wall_clock():
+        try:
+            return next(wall)
+        except StopIteration:
+            return 1e9 - 7200.0
+
+    monkeypatch.setattr(time_mod, "time", jumping_wall_clock)
+    cfg = packed_model.cfg
+    eng = SNNServeEngine(packed_model, SNNEngineConfig(max_batch=2,
+                                                       buckets=(2,)))
+    rng = np.random.default_rng(4)
+    for uid in range(2):
+        eng.add_request(SNNRequest(
+            uid=uid, image=rng.random(
+                (cfg.img_size, cfg.img_size, cfg.in_channels)
+            ).astype(np.float32)))
+    stats = eng.run_until_done()
+    assert stats["requests"] == 2
+    for req in eng.done.values():
+        assert 0.0 <= req.latency_s < 60.0
+        assert 0.0 <= req.compute_s <= req.latency_s
+    assert 0.0 < stats["latency_max_ms"] < 60_000.0
+    assert stats["latency_p50_ms"] >= 0.0
+
+
 def test_engine_stats_accounting(packed_model):
     cfg = packed_model.cfg
     eng = SNNServeEngine(packed_model, SNNEngineConfig(max_batch=2,

@@ -84,6 +84,27 @@ def test_hlo_walker_finds_known_trip_count():
     assert m and int(m.group(1)) == 48
 
 
+def test_bottleneck_tie_break_is_deterministic():
+    """Equal roofline terms must resolve by the documented priority
+    (compute > memory > collective), not by string comparison of the
+    labels — the tuple-max fallthrough this replaces picked 'memory' on
+    an all-zero tie purely because 'm' > 'c'."""
+    from repro.perfmodel.roofline import pick_bottleneck
+
+    assert pick_bottleneck(0.0, 0.0, 0.0) == "compute"
+    assert pick_bottleneck(1.0, 1.0, 1.0) == "compute"
+    assert pick_bottleneck(1.0, 2.0, 2.0) == "memory"
+    assert pick_bottleneck(0.0, 0.0, 1e-9) == "collective"
+
+
+def test_bottleneck_dominant_term_wins():
+    from repro.perfmodel.roofline import pick_bottleneck
+
+    assert pick_bottleneck(3.0, 1.0, 2.0) == "compute"
+    assert pick_bottleneck(1.0, 3.0, 2.0) == "memory"
+    assert pick_bottleneck(1.0, 2.0, 3.0) == "collective"
+
+
 def test_walker_collectives_empty_on_single_device():
     from repro.launch.dryrun import analyze_hlo
 

@@ -57,6 +57,24 @@ def test_engine_greedy_matches_sequential_decode(served):
         assert eng.done[i].output == ref_outputs[i], i
 
 
+def test_engine_flags_truncated_run(served):
+    """max_steps exhausted with work left must be flagged — silently
+    truncated streams poison throughput stats."""
+    cfg, params = served
+    eng = ServeEngine(cfg, params, EngineConfig(slots=1, max_len=64))
+    rng = np.random.default_rng(2)
+    for uid in range(2):
+        eng.add_request(Request(
+            uid=uid, prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+            max_new_tokens=6))
+    stats = eng.run_until_done(max_steps=2)
+    assert stats["incomplete"]
+    assert stats["requests"] < 2
+    stats = eng.run_until_done()
+    assert not stats["incomplete"]
+    assert stats["requests"] == 2
+
+
 def test_engine_eos_stops(served):
     cfg, params = served
     eng = ServeEngine(cfg, params, EngineConfig(slots=1, max_len=64))
