@@ -93,7 +93,12 @@ def run(smoke: bool = True, model: str = "vgg9", requests: int = 24,
             f";batches={stats['batches']};compiles={stats['compiles']}"
             f";recompiles_after_warmup={recompiles}"
             f";latency_p50_ms={stats['latency_p50_ms']:.2f}"
-            f";latency_p95_ms={stats['latency_p95_ms']:.2f}")
+            f";latency_p95_ms={stats['latency_p95_ms']:.2f}"
+            # informational split (not structural — see gate.py): where
+            # request latency goes and how much compute padding burns
+            f";queue_avg_ms={stats['queue_avg_ms']:.2f}"
+            f";compute_avg_ms={stats['compute_avg_ms']:.2f}"
+            f";padding_waste={stats['padding_waste']:.3f}")
 
     return bench_lib.write_json("serve" if smoke else "serve_full",
                                 path=out)

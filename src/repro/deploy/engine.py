@@ -25,9 +25,25 @@ local devices' ``data`` axis (bucket sizes round up to a device
 multiple) — the single-host version of the production mesh in
 launch/mesh.py.
 
-Accounting: every request records queue + compute latency; ``stats()``
-aggregates throughput (img/s), per-bucket batch counts, and the compile
-count.  benchmarks/serve_bench.py turns these into BENCH_serve.json.
+Accounting: every request records its latency SPLIT — ``queue_s``
+(enqueue -> bucket admit: the batch-formation share the ROADMAP calls
+the current p95 bottleneck) separately from ``compute_s`` (the batched
+forward's share); ``stats()`` aggregates throughput (img/s), per-bucket
+batch counts, padding waste (padded slots / bucket slots), and the
+compile count.  benchmarks/serve_bench.py turns these into
+BENCH_serve.json.
+
+Observability: the engine binds instruments from a
+:class:`repro.obs.MetricsRegistry` (the process default unless one is
+passed) at construction — request/batch/compile-hit/miss counters,
+queue-depth / batch-occupancy / padding-waste gauges, queue/compute/
+latency histograms, and span events for enqueue -> admit -> compile ->
+step -> drain.  With the default registry disabled (the default) every
+instrument is a shared no-op, so the serving hot path pays only empty
+method calls — the bench-gate serve baseline holds either way.  Each
+device step also runs under a ``jax.profiler.TraceAnnotation`` named by
+bucket, so ``--profile`` traces read as ``snn_serve_step/b<bucket>``
+instead of anonymous dispatches.
 """
 
 from __future__ import annotations
@@ -42,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.deploy.package import DeployedModel
 
 
@@ -53,7 +70,9 @@ class SNNRequest:
     # filled by the engine:
     logits: Optional[np.ndarray] = None
     pred: Optional[int] = None
-    latency_s: float = 0.0           # enqueue -> result (incl. queue wait)
+    latency_s: float = 0.0           # enqueue -> result (queue + compute
+                                     # + drain bookkeeping)
+    queue_s: float = 0.0             # enqueue -> bucket admit
     compute_s: float = 0.0           # the batched forward's share
 
 
@@ -85,7 +104,8 @@ class SNNServeEngine:
     folded thresholds) — the engine never touches the quantizer.
     """
 
-    def __init__(self, model: DeployedModel, ecfg: SNNEngineConfig):
+    def __init__(self, model: DeployedModel, ecfg: SNNEngineConfig,
+                 registry: Optional["obs.MetricsRegistry"] = None):
         cfg = model.cfg
         if not cfg.int_path:
             raise ValueError("SNNServeEngine serves the packed integer "
@@ -111,11 +131,50 @@ class SNNServeEngine:
         self.per_bucket: Dict[int, int] = {}
         self.total_batches = 0
         self.total_compute_s = 0.0
+        self.total_padded_slots = 0
+        self.total_slots = 0
         # ...and O(1) request accounting, so draining ``done`` through
         # pop_result never zeroes the serving stats
         self.total_requests = 0
         self.total_latency_s = 0.0
+        self.total_queue_s = 0.0
+        self.total_request_compute_s = 0.0
         self.max_latency_s = 0.0
+
+        # Instruments bind once, here: with a disabled registry (the
+        # process default unless the caller enabled/passed one) every
+        # handle is the shared no-op and the loop below never branches
+        # on "is observability on".
+        self.obs = registry if registry is not None else \
+            obs.default_registry()
+        m = self.obs
+        self._m_requests = m.counter("snn_serve_requests_total",
+                                     "requests completed")
+        self._m_batches = m.counter("snn_serve_batches_total",
+                                    "microbatches served")
+        self._m_compile_miss = m.counter("snn_serve_compile_total",
+                                         "bucket executable builds",
+                                         labels={"result": "miss"})
+        self._m_compile_hit = m.counter("snn_serve_compile_total",
+                                        "bucket executable cache hits",
+                                        labels={"result": "hit"})
+        self._m_queue_depth = m.gauge("snn_serve_queue_depth",
+                                      "requests waiting for a batch")
+        self._m_occupancy = m.gauge("snn_serve_batch_occupancy",
+                                    "real requests / bucket slots, last "
+                                    "batch")
+        self._m_pad_waste = m.gauge("snn_serve_padding_waste",
+                                    "padded slots / bucket slots, last "
+                                    "batch")
+        self._m_queue_us = m.histogram("snn_serve_queue_us",
+                                       obs.LATENCY_EDGES_US,
+                                       "enqueue -> bucket admit")
+        self._m_compute_us = m.histogram("snn_serve_compute_us",
+                                         obs.LATENCY_EDGES_US,
+                                         "batched forward share")
+        self._m_latency_us = m.histogram("snn_serve_latency_us",
+                                         obs.LATENCY_EDGES_US,
+                                         "enqueue -> drain")
 
     # -- compile plumbing ----------------------------------------------------
 
@@ -138,6 +197,8 @@ class SNNServeEngine:
     def _executable(self, bucket: int):
         exe = self._compiled.get(bucket)
         if exe is None:
+            self._m_compile_miss.inc()
+            t0 = time.perf_counter()
             cfg = self.cfg
             spec = jax.ShapeDtypeStruct(
                 (bucket, cfg.img_size, cfg.img_size, cfg.in_channels),
@@ -145,6 +206,10 @@ class SNNServeEngine:
             exe = jax.jit(self._fwd).lower(self.model, spec).compile()
             self._compiled[bucket] = exe
             self.compile_count += 1
+            self.obs.event("compile", bucket=bucket, result="miss",
+                           compile_us=(time.perf_counter() - t0) * 1e6)
+        else:
+            self._m_compile_hit.inc()
         return exe
 
     def warmup(self) -> int:
@@ -173,6 +238,8 @@ class SNNServeEngine:
         # corrupt p50/p95/max and flap the benchmark gate
         req._t0 = time.perf_counter()
         self.queue.append(req)
+        self._m_queue_depth.set(len(self.queue))
+        self.obs.event("enqueue", uid=req.uid, queue_depth=len(self.queue))
 
     # -- main loop -----------------------------------------------------------
 
@@ -183,10 +250,19 @@ class SNNServeEngine:
             return 0
         batch: List[SNNRequest] = []
         cap = min(self.ecfg.max_batch, self.buckets[-1])
+        t_admit = time.perf_counter()
         while self.queue and len(batch) < cap:
-            batch.append(self.queue.popleft())
+            req = self.queue.popleft()
+            req.queue_s = t_admit - req._t0
+            batch.append(req)
         n = len(batch)
         bucket = self.bucket_for(n)
+        self._m_queue_depth.set(len(self.queue))
+        self._m_occupancy.set(n / bucket)
+        pad_frac = (bucket - n) / bucket
+        self._m_pad_waste.set(pad_frac)
+        self.obs.event("admit", n=n, bucket=bucket, pad_frac=pad_frac,
+                       queue_depth=len(self.queue))
         exe = self._executable(bucket)
 
         images = np.zeros((bucket, self.cfg.img_size, self.cfg.img_size,
@@ -194,12 +270,21 @@ class SNNServeEngine:
         for i, req in enumerate(batch):
             images[i] = req.image
         t0 = time.perf_counter()
-        logits = exe(self.model, jnp.asarray(images))
-        logits = np.asarray(jax.block_until_ready(logits))
+        # the annotation names this dispatch in --profile traces
+        # (snn_serve_step/b<bucket>) — zero work when nothing is tracing
+        with jax.profiler.TraceAnnotation(f"snn_serve_step/b{bucket}"):
+            logits = exe(self.model, jnp.asarray(images))
+            logits = np.asarray(jax.block_until_ready(logits))
         dt = time.perf_counter() - t0
         self.per_bucket[bucket] = self.per_bucket.get(bucket, 0) + 1
         self.total_batches += 1
         self.total_compute_s += dt
+        self.total_padded_slots += bucket - n
+        self.total_slots += bucket
+        self._m_batches.inc()
+        self._m_compute_us.observe(dt * 1e6)
+        self.obs.event("step", bucket=bucket, n=n, pad_frac=pad_frac,
+                       compute_us=dt * 1e6)
 
         now = time.perf_counter()
         for i, req in enumerate(batch):
@@ -210,8 +295,17 @@ class SNNServeEngine:
             req.latency_s = now - req._t0
             self.total_requests += 1
             self.total_latency_s += req.latency_s
+            self.total_queue_s += req.queue_s
+            self.total_request_compute_s += dt
             self.max_latency_s = max(self.max_latency_s, req.latency_s)
             self.done[req.uid] = req
+            self._m_requests.inc()
+            self._m_queue_us.observe(req.queue_s * 1e6)
+            self._m_latency_us.observe(req.latency_s * 1e6)
+            self.obs.event("drain", uid=req.uid,
+                           queue_us=req.queue_s * 1e6,
+                           compute_us=req.compute_s * 1e6,
+                           latency_us=req.latency_s * 1e6)
         return n
 
     def pop_result(self, uid: int) -> SNNRequest:
@@ -254,6 +348,7 @@ class SNNServeEngine:
         externally measured wall instead (only meaningful when it spans
         every completed request)."""
         lats = sorted(r.latency_s for r in self.done.values())
+        queues = sorted(r.queue_s for r in self.done.values())
         wall = wall_s if wall_s is not None else self.total_compute_s
         n = self.total_requests
         return {
@@ -265,9 +360,20 @@ class SNNServeEngine:
             "wall_s": wall,
             "images_per_s": n / max(wall, 1e-9),
             "latency_avg_ms": 1e3 * self.total_latency_s / n if n else 0.0,
+            # the latency SPLIT: batch formation vs device compute —
+            # the number that tells you whether to tune buckets or
+            # kernels (ROADMAP: current p95 is batch-formation-bound)
+            "queue_avg_ms": 1e3 * self.total_queue_s / n if n else 0.0,
+            "compute_avg_ms":
+                1e3 * self.total_request_compute_s / n if n else 0.0,
+            "queue_p95_ms": 1e3 * self._pctl(queues, 0.95),
             "latency_p50_ms": 1e3 * self._pctl(lats, 0.5),
             "latency_p95_ms": 1e3 * self._pctl(lats, 0.95),
             "latency_max_ms": 1e3 * self.max_latency_s,
+            # padded slots / bucket slots over every served batch: the
+            # compute wasted forming full buckets from partial batches
+            "padding_waste":
+                self.total_padded_slots / max(self.total_slots, 1),
             "packed_mbytes": self.model.nbytes_packed() / 1e6,
             "compression_x": round(self.model.compression_ratio(), 2),
         }

@@ -15,6 +15,7 @@ import argparse
 def main():
     from repro.configs import add_geometry_flags
     from repro.launch.profiling import add_profile_flag, maybe_trace
+    from repro.obs import add_metrics_flag
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="vgg9",
@@ -32,6 +33,7 @@ def main():
                     help="print the declarative model graph (the one "
                          "topology the train/int/packaged lowerings share)")
     add_profile_flag(ap, "/tmp/repro_trace/serve_snn")
+    add_metrics_flag(ap, "/tmp/repro_metrics/serve_snn.jsonl")
     args = ap.parse_args()
 
     import time
@@ -39,11 +41,16 @@ def main():
     import jax
     import numpy as np
 
+    from repro import obs
     from repro.deploy import (
         SNNEngineConfig, SNNRequest, SNNServeEngine, deploy, deploy_config,
         load,
     )
     from repro.models import snn_cnn
+
+    # enable BEFORE constructing the engine — instruments bind at
+    # construction time (no-op handles otherwise)
+    registry = obs.enable_default() if args.metrics else None
 
     cfg = deploy_config(args.model, args.bits, smoke=args.smoke)
     if args.show_graph:
@@ -80,7 +87,36 @@ def main():
           f"({stats['images_per_s']:.1f} img/s, "
           f"{stats['batches']} batches, {stats['compiles']} compiles, "
           f"latency p50={stats['latency_p50_ms']:.1f}ms "
-          f"p95={stats['latency_p95_ms']:.1f}ms)")
+          f"p95={stats['latency_p95_ms']:.1f}ms, "
+          f"queue avg={stats['queue_avg_ms']:.1f}ms vs "
+          f"compute avg={stats['compute_avg_ms']:.1f}ms, "
+          f"padding waste={stats['padding_waste']:.0%})")
+
+    if args.metrics:
+        # model telemetry is a SAMPLED eager pass (spike stats are host
+        # floats — under jit they would be tracers), one per run, not
+        # per request: per-layer spike rate / saturation / resets on a
+        # sample batch, plus the packed weights' code-space utilization
+        sample = jax.numpy.asarray(rng.random(
+            (2, cfg.img_size, cfg.img_size,
+             cfg.in_channels)).astype(np.float32))
+        _, layer_records = obs.instrumented_forward(
+            cfg, model.float_params, sample, package=model,
+            registry=registry)
+        for row in layer_records:
+            print(f"[obs] {row['layer']:<12} rate={row['rate']:.3f} "
+                  f"saturation={row['saturation']:.3f} "
+                  f"silent={row['silent']:.3f} resets={row['resets']}")
+        util = obs.package_code_utilization(model, registry=registry)
+        for name, h in util.items():
+            print(f"[obs] {name:<12} W{h['bits']} code util "
+                  f"{h['utilization']:.2f} clip {h['clip_frac']:.3f}")
+        out = obs.write_jsonl(registry, args.metrics,
+                              meta={"entry": "serve_snn",
+                                    "model": args.model,
+                                    "bits": args.bits})
+        print(f"[obs] metrics written to {out} — validate with "
+              f"`python -m repro.obs.validate {out}`")
 
 
 if __name__ == "__main__":

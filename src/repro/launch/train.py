@@ -28,12 +28,15 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--resume", action="store_true")
     from repro.launch.profiling import add_profile_flag, maybe_trace
+    from repro.obs import add_metrics_flag
 
     add_profile_flag(ap, "/tmp/repro_trace/train")
+    add_metrics_flag(ap, "/tmp/repro_metrics/train.jsonl")
     args = ap.parse_args()
 
     import dataclasses
 
+    from repro import obs
     from repro.configs import get_config
     from repro.configs.base import SpikingConfig
     from repro.quant.formats import PrecisionConfig
@@ -57,11 +60,20 @@ def main():
     if not args.resume:
         import shutil
         shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    # enable BEFORE constructing the trainer — instruments bind at
+    # construction time (no-op handles otherwise)
+    registry = obs.enable_default() if args.metrics else None
     trainer = Trainer(cfg, tcfg)
     with maybe_trace(args.profile):
         out = trainer.run()
     print(f"first loss {out['first_loss']:.4f} -> "
           f"final loss {out['final_loss']:.4f}")
+    if args.metrics:
+        path = obs.write_jsonl(registry, args.metrics,
+                               meta={"entry": "train", "arch": args.arch,
+                                     "steps": args.steps})
+        print(f"[obs] metrics written to {path} — validate with "
+              f"`python -m repro.obs.validate {path}`")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,60 @@
+"""Runtime observability: metrics registry, request tracing, SNN telemetry.
+
+One registry serves every runtime surface (see obs/README.md for the
+naming contract and the overhead policy):
+
+  * the serve engine (deploy/engine.py) traces requests through
+    enqueue -> admit -> compile hit/miss -> step -> drain and keeps
+    queue-depth / batch-occupancy / padding-waste gauges current;
+  * the trainer (train/trainer.py) records step time, loss, grad-norm
+    and lr, and exposes levanter-style per-step callback hooks;
+  * the graph layer yields per-layer spike rates, saturation/reset
+    counts, and weight code-utilization histograms for any executor
+    via :class:`~repro.obs.telemetry.TelemetryExecutor` — no kernel
+    changes.
+
+The process default registry is DISABLED until something opts in
+(``--metrics`` on a launcher, :func:`enable_default` in code); disabled,
+every instrument is a shared no-op and the hot paths pay only an empty
+method call.  ``python -m repro.obs.validate`` schema-checks emitted
+JSONL artifacts.
+"""
+
+from repro.obs.exporters import (    # noqa: F401
+    SCHEMA_VERSION,
+    read_jsonl,
+    to_prometheus,
+    validate_jsonl,
+    write_jsonl,
+)
+from repro.obs.registry import (     # noqa: F401
+    FRACTION_EDGES,
+    LATENCY_EDGES_US,
+    NULL_INSTRUMENT,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_registry,
+    disable_default,
+    enable_default,
+)
+from repro.obs.telemetry import (    # noqa: F401
+    TelemetryExecutor,
+    code_histogram,
+    instrumented_forward,
+    package_code_utilization,
+    spike_stats,
+)
+
+
+def add_metrics_flag(ap, default_path: str) -> None:
+    """The shared ``--metrics [PATH]`` launcher flag (twin of
+    profiling.add_profile_flag): bare ``--metrics`` emits JSONL to
+    ``default_path``, an explicit argument overrides the destination,
+    omitted entirely leaves the default registry disabled."""
+    ap.add_argument("--metrics", nargs="?", const=default_path, default=None,
+                    metavar="PATH",
+                    help="enable the metrics registry and write a JSONL "
+                         f"snapshot to PATH (default {default_path}) on "
+                         "exit; validate with python -m repro.obs.validate")

@@ -1,0 +1,213 @@
+"""SNN model telemetry through the graph layer — no kernel changes.
+
+Spike activity is the quantity real SNN energy models are built on
+(every spike is a synaptic-memory access; see PAPERS.md on the hardware
+view of SNN efficiency), and L-SPINE's INT2/4/8 analysis additionally
+cares how much of each precision's code space the packed weights
+actually use.  Both are observable from OUTSIDE the kernels:
+
+* :class:`TelemetryExecutor` wraps any graph executor (float / int /
+  packaged) and records, at the historical instrumentation points (after
+  every top-level Conv, after every Residual merge, after every Dense):
+
+    ``rate``        mean firing probability over (T, B, units)
+    ``saturation``  fraction of units firing in EVERY timestep — the
+                    rate-code ceiling; a saturated unit carries no more
+                    information and (on hardware) maximum switching
+                    energy.  The membrane of such a unit re-crosses
+                    threshold each step, i.e. it is reset-saturated.
+    ``silent``      fraction of units that never fire (dead capacity)
+    ``resets``      total threshold crossings in the batch — every
+                    output spike triggers exactly one reset in BOTH
+                    reset modes (soft subtracts theta, hard rewrites
+                    v_reset), so the spike count IS the reset count.
+
+  Recording is eager-only, like ``apply_with_rates`` — under ``jit``
+  the floats would be tracers.  The serve path therefore samples: one
+  instrumented eager forward per ``--metrics`` run, not per request
+  (overhead policy in obs/README.md).
+
+* :func:`code_histogram` / :func:`package_code_utilization` read the
+  packed weights of a layer / a whole :class:`~repro.deploy.DeployedModel`
+  and histogram the integer codes over the 2^bits code space —
+  ``utilization`` (fraction of codes used) and ``clip_frac`` (mass at
+  the extreme codes) are the first-order health checks of the MSE clip
+  search at 2-bit.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs.registry import (
+    FRACTION_EDGES,
+    MetricsRegistry,
+    default_registry,
+)
+
+
+# ---------------------------------------------------------------------------
+# spike statistics
+# ---------------------------------------------------------------------------
+
+def spike_stats(spikes_t) -> Dict[str, float]:
+    """Activity statistics of one layer's (T, B, ...) spike train.
+    Works on the float twin's {0.0, 1.0} spikes and the integer path's
+    {0, 1} int32 spikes alike."""
+    s = jnp.asarray(spikes_t)
+    fired = s > 0
+    per_unit = jnp.mean(fired.astype(jnp.float32), axis=0)  # (B, units...)
+    return {
+        "rate": float(jnp.mean(fired.astype(jnp.float32))),
+        "saturation": float(jnp.mean(per_unit >= 1.0)),
+        "silent": float(jnp.mean(per_unit <= 0.0)),
+        "resets": int(jnp.sum(fired)),
+    }
+
+
+class TelemetryExecutor:
+    """Instrumenting wrapper: delegates every node method to ``inner``
+    and records spike statistics after the spiking layers.  Duck-typed
+    against :func:`repro.graph.executors.run_graph` — the traversal only
+    calls node methods, so any executor (and any future one) can be
+    wrapped without touching graph code.
+
+    Residual body convs are recorded once, at the merge (matching the
+    historical ``apply_with_rates`` points); the non-spiking readout and
+    the pools are pass-through.
+    """
+
+    kind = "telemetry"
+
+    def __init__(self, inner, registry: Optional[MetricsRegistry] = None,
+                 prefix: str = "snn_layer"):
+        self.inner = inner
+        self.obs = registry if registry is not None else default_registry()
+        self.prefix = prefix
+        self.records: List[Dict] = []
+
+    # run_graph-facing delegation (trace stays on the inner executor)
+    @property
+    def trace(self):
+        return self.inner.trace
+
+    def encode(self, spec, images):
+        return self.inner.encode(spec, images)
+
+    def pool(self, spec, x):
+        return self.inner.pool(spec, x)
+
+    def readout(self, spec, x):
+        return self.inner.readout(spec, x)
+
+    def conv(self, spec, x):
+        return self._record("conv", spec.name, self.inner.conv(spec, x))
+
+    def residual(self, spec, x):
+        return self._record("residual", spec.name,
+                            self.inner.residual(spec, x))
+
+    def dense(self, spec, x):
+        return self._record("dense", spec.name, self.inner.dense(spec, x))
+
+    def _record(self, kind: str, name: str, spikes_t):
+        stats = spike_stats(spikes_t)
+        row = {"layer": name, "node": kind, "executor": self.inner.kind}
+        row.update(stats)
+        self.records.append(row)
+        labels = {"layer": name}
+        self.obs.gauge(f"{self.prefix}_spike_rate",
+                       "mean firing probability", labels).set(stats["rate"])
+        self.obs.gauge(f"{self.prefix}_saturation",
+                       "fraction of units firing every timestep",
+                       labels).set(stats["saturation"])
+        self.obs.gauge(f"{self.prefix}_silent",
+                       "fraction of units that never fire",
+                       labels).set(stats["silent"])
+        self.obs.counter(f"{self.prefix}_resets_total",
+                         "threshold crossings observed",
+                         labels).inc(stats["resets"])
+        self.obs.histogram(f"{self.prefix}_rates", FRACTION_EDGES,
+                           "per-layer spike-rate distribution"
+                           ).observe(stats["rate"])
+        self.obs.event("layer_telemetry", layer=name, node=kind, **stats)
+        return spikes_t
+
+
+def instrumented_forward(cfg, params, images, package=None,
+                         registry: Optional[MetricsRegistry] = None):
+    """One eager instrumented forward of the model ``cfg`` describes:
+    builds the graph, picks the float/int/packaged lowering exactly like
+    ``snn_cnn.apply``, wraps it in :class:`TelemetryExecutor`, and runs
+    it.  Returns ``(logits, records)`` and emits the per-layer metrics
+    into ``registry`` (default: the process default)."""
+    from repro.graph import build_graph, executor_for, run_graph
+
+    graph = build_graph(cfg)
+    ex = TelemetryExecutor(executor_for(graph, params, package=package),
+                           registry=registry)
+    logits = run_graph(graph, ex, images)
+    return logits, ex.records
+
+
+# ---------------------------------------------------------------------------
+# quantization code utilization
+# ---------------------------------------------------------------------------
+
+def code_histogram(qt) -> Dict:
+    """Histogram a packed layer's integer weight codes over the full
+    [qmin, qmax] code space.  ``qt`` is a ``QuantizedTensor`` (dense) or
+    ``QuantizedConvTensor`` (conv — padded input channels are excluded:
+    they are structural zeros, not weights)."""
+    from repro.core import packing
+    from repro.quant.formats import QuantizedConvTensor
+    from repro.quant.ptq import unpack_conv_codes
+
+    if isinstance(qt, QuantizedConvTensor):
+        codes = np.asarray(unpack_conv_codes(qt))
+    else:
+        codes = np.asarray(packing.unpack(qt.data, qt.bits, qt.n))
+    n_codes = 1 << qt.bits
+    qmin = -(n_codes // 2)
+    counts = np.bincount((codes.reshape(-1) - qmin).astype(np.int64),
+                         minlength=n_codes)
+    total = int(counts.sum())
+    return {
+        "bits": qt.bits,
+        "qmin": qmin,
+        "counts": counts.tolist(),
+        "total": total,
+        "utilization": float(np.count_nonzero(counts)) / n_codes,
+        "clip_frac": float(counts[0] + counts[-1]) / max(total, 1),
+        "zero_frac": float(counts[-qmin]) / max(total, 1),
+    }
+
+
+def package_code_utilization(model, registry: Optional[MetricsRegistry]
+                             = None) -> Dict[str, Dict]:
+    """Per-layer code histograms for a ``DeployedModel`` — emitted as
+    gauges (``snn_weight_code_utilization{layer=...}``, ``..._clip_frac``)
+    plus one aggregate utilization histogram.  Returns the per-layer
+    dicts keyed by layer name."""
+    obs = registry if registry is not None else default_registry()
+    out: Dict[str, Dict] = {}
+    util_h = obs.histogram("snn_weight_code_utilization_hist",
+                           FRACTION_EDGES,
+                           "per-layer code-space utilization")
+    for name, lp in model.layers.items():
+        h = code_histogram(lp.qt)
+        out[name] = h
+        labels = {"layer": name}
+        obs.gauge("snn_weight_code_utilization",
+                  "fraction of the 2^bits code space used",
+                  labels).set(h["utilization"])
+        obs.gauge("snn_weight_code_clip_frac",
+                  "weight mass at the extreme codes", labels
+                  ).set(h["clip_frac"])
+        util_h.observe(h["utilization"])
+        obs.event("code_utilization", layer=name, bits=h["bits"],
+                  utilization=h["utilization"], clip_frac=h["clip_frac"])
+    return out

@@ -3,6 +3,14 @@
 The loop is deliberately boring — all the interesting failure behaviour
 lives in distributed/{checkpoint,fault_tolerance}.py and is exercised by
 tests/test_fault_tolerance.py and examples/fault_tolerant_training.py.
+
+Observability: every step's loss / lr / grad-norm / duration goes
+through the shared metrics registry (repro.obs — counters, gauges and a
+step-time histogram, no-op when the registry is disabled) and through
+``hooks`` — levanter-style per-step callbacks ``fn(info: dict)`` with
+``info = {step, loss, lr, grad_norm, dt_s, straggler}``.  Hooks observe;
+they must not mutate state.  ``launch/train.py --metrics`` dumps the
+registry as JSONL on exit.
 """
 
 from __future__ import annotations
@@ -10,11 +18,12 @@ from __future__ import annotations
 import dataclasses
 import time
 from pathlib import Path
-from typing import Callable, Optional
+from typing import Callable, List, Optional
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ArchConfig
 from repro.data import synthetic
 from repro.distributed import sharding as shd
@@ -46,15 +55,31 @@ class TrainConfig:
 class Trainer:
     def __init__(self, cfg: ArchConfig, tcfg: TrainConfig, mesh=None,
                  injector: Optional[FailureInjector] = None,
-                 log: Callable[[str], None] = print):
+                 log: Callable[[str], None] = print,
+                 hooks: Optional[List[Callable[[dict], None]]] = None,
+                 registry: Optional["obs.MetricsRegistry"] = None):
         self.cfg = cfg
         self.tcfg = tcfg
         self.mesh = mesh
         self.injector = injector
         self.log = log
+        self.hooks = list(hooks or [])
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
         self.watchdog = StepWatchdog(WatchdogConfig())
         self.history: list = []
+
+        # instruments bind once (no-op handles when the registry is
+        # disabled — same policy as the serve engine)
+        self.obs = registry if registry is not None else \
+            obs.default_registry()
+        m = self.obs
+        self._m_steps = m.counter("train_steps_total", "optimizer steps")
+        self._m_step_us = m.histogram("train_step_us", obs.LATENCY_EDGES_US,
+                                      "wall time per optimizer step")
+        self._m_loss = m.gauge("train_loss", "last step loss")
+        self._m_lr = m.gauge("train_lr", "last step learning rate")
+        self._m_grad_norm = m.gauge("train_grad_norm",
+                                    "last step global grad norm")
 
         self._step_fn = make_train_step(cfg, tcfg.opt)
         if mesh is not None:
@@ -113,6 +138,20 @@ class Trainer:
             losses.append(loss)
             self.history.append({"step": step, "loss": loss, "dt": dt,
                                  "verdict": verdict})
+            lr = float(metrics["lr"])
+            gnorm = float(metrics.get("grad_norm", 0.0))
+            self._m_steps.inc()
+            self._m_step_us.observe(dt * 1e6)
+            self._m_loss.set(loss)
+            self._m_lr.set(lr)
+            self._m_grad_norm.set(gnorm)
+            self.obs.event("train_step", step=step, loss=loss,
+                           dt_us=dt * 1e6, grad_norm=gnorm)
+            info = {"step": step, "loss": loss, "lr": lr,
+                    "grad_norm": gnorm, "dt_s": dt,
+                    "straggler": verdict != "ok"}
+            for hook in self.hooks:
+                hook(info)
             if step % self.tcfg.log_every == 0:
                 self.log(f"[trainer] step={step} loss={loss:.4f} "
                          f"dt={dt*1e3:.0f}ms lr={float(metrics['lr']):.2e}")

@@ -7,7 +7,12 @@ The contract under test (ISSUE 4 acceptance criteria):
     INT2/INT4/INT8 and both model families;
   * the save/load npz roundtrip is bit-exact with the in-memory package;
   * ``SNNServeEngine`` compiles exactly once per batch bucket and serves
-    a mixed-size request stream with ZERO recompiles after warmup.
+    a mixed-size request stream with ZERO recompiles after warmup;
+  * (ISSUE 7) every served request carries the latency SPLIT
+    (``queue_s`` + ``compute_s`` <= ``latency_s``), ``stats()`` reports
+    padding waste exactly, and an enabled metrics registry sees the
+    full enqueue -> admit -> step -> drain trace while a disabled one
+    costs the engine nothing but no-op calls.
 """
 
 import dataclasses
@@ -325,3 +330,118 @@ def test_engine_stats_accounting(packed_model):
     assert drained["images_per_s"] > 0
     assert drained["latency_avg_ms"] > 0
     assert drained["latency_max_ms"] >= stats["latency_p95_ms"]
+
+# ---------------------------------------------------------------------------
+# observability: latency split, padding waste, metrics integration
+# ---------------------------------------------------------------------------
+
+def _queue_requests(eng, cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    for uid in range(n):
+        eng.add_request(SNNRequest(
+            uid=uid, image=rng.random(
+                (cfg.img_size, cfg.img_size, cfg.in_channels)
+            ).astype(np.float32)))
+
+
+def test_engine_latency_split(packed_model):
+    """queue_s (enqueue -> admit) and compute_s (batched forward) are
+    disjoint sub-intervals of latency_s — the split can never exceed the
+    whole."""
+    cfg = packed_model.cfg
+    eng = SNNServeEngine(packed_model, SNNEngineConfig(max_batch=2,
+                                                       buckets=(2,)))
+    _queue_requests(eng, cfg, 5, seed=5)
+    stats = eng.run_until_done()
+    assert len(eng.done) == 5
+    for req in eng.done.values():
+        assert req.queue_s >= 0.0
+        assert req.compute_s > 0.0
+        assert req.latency_s >= req.queue_s + req.compute_s
+    assert stats["queue_avg_ms"] >= 0.0
+    assert stats["compute_avg_ms"] > 0.0
+    assert stats["latency_avg_ms"] >= (stats["queue_avg_ms"]
+                                       + stats["compute_avg_ms"])
+    assert stats["queue_p95_ms"] >= 0.0
+
+
+def test_engine_padding_waste_exact(packed_model):
+    """5 requests into (4,)-bucketed batches: 4 + 1 -> two batches of 4
+    slots, 3 of them padding -> waste = 3/8 exactly."""
+    cfg = packed_model.cfg
+    eng = SNNServeEngine(packed_model, SNNEngineConfig(max_batch=4,
+                                                       buckets=(4,)))
+    _queue_requests(eng, cfg, 5, seed=6)
+    stats = eng.run_until_done()
+    assert stats["batches"] == 2
+    assert eng.total_slots == 8
+    assert eng.total_padded_slots == 3
+    assert stats["padding_waste"] == pytest.approx(3 / 8)
+    # a full stream of exact-bucket batches wastes nothing
+    eng2 = SNNServeEngine(packed_model, SNNEngineConfig(max_batch=2,
+                                                        buckets=(2,)))
+    _queue_requests(eng2, cfg, 4, seed=7)
+    assert eng2.run_until_done()["padding_waste"] == 0.0
+
+
+def test_engine_metrics_integration(packed_model):
+    """With an explicit enabled registry the engine emits the full
+    request trace; counters/histograms reconcile with stats()."""
+    from repro.obs import MetricsRegistry
+
+    reg = MetricsRegistry()
+    cfg = packed_model.cfg
+    eng = SNNServeEngine(packed_model,
+                         SNNEngineConfig(max_batch=4, buckets=(2, 4)),
+                         registry=reg)
+    eng.warmup()
+    _queue_requests(eng, cfg, 6, seed=8)
+    stats = eng.run_until_done()   # 4 + 2: both buckets exercised
+
+    assert reg.counter("snn_serve_requests_total").value == 6
+    assert reg.counter("snn_serve_batches_total").value == stats["batches"]
+    miss = reg.counter("snn_serve_compile_total",
+                       labels={"result": "miss"})
+    hit = reg.counter("snn_serve_compile_total", labels={"result": "hit"})
+    assert miss.value == eng.compile_count == 2
+    assert hit.value == stats["batches"]   # every step after warmup hits
+    assert reg.gauge("snn_serve_queue_depth").value == 0.0
+
+    from repro.obs import LATENCY_EDGES_US
+    assert reg.histogram("snn_serve_queue_us", LATENCY_EDGES_US).count == 6
+    assert reg.histogram("snn_serve_latency_us",
+                         LATENCY_EDGES_US).count == 6
+    assert reg.histogram("snn_serve_compute_us",
+                         LATENCY_EDGES_US).count == stats["batches"]
+
+    events = [ev["event"] for ev in reg.spans()]
+    assert events.count("enqueue") == 6
+    assert events.count("drain") == 6
+    assert events.count("admit") == events.count("step") == stats["batches"]
+    assert events.count("compile") == 2    # warmup misses only
+    # the trace is ordered: every admit precedes its step
+    assert events.index("enqueue") < events.index("admit") \
+        < events.index("step") < events.index("drain")
+    # drain spans carry the split in microseconds
+    drain = [ev for ev in reg.spans() if ev["event"] == "drain"]
+    for ev in drain:
+        assert ev["latency_us"] >= ev["queue_us"] + ev["compute_us"] > 0.0
+
+
+def test_engine_disabled_registry_is_noop(packed_model):
+    """Without opt-in the engine binds the shared no-op instrument and
+    records nothing — the overhead contract the serve bench gate relies
+    on."""
+    from repro.obs import NULL_INSTRUMENT, MetricsRegistry
+
+    reg = MetricsRegistry(enabled=False)
+    cfg = packed_model.cfg
+    eng = SNNServeEngine(packed_model, SNNEngineConfig(max_batch=2,
+                                                       buckets=(2,)),
+                         registry=reg)
+    assert eng._m_requests is NULL_INSTRUMENT
+    assert eng._m_latency_us is NULL_INSTRUMENT
+    _queue_requests(eng, cfg, 2, seed=9)
+    stats = eng.run_until_done()
+    assert stats["requests"] == 2          # stats() still fully works
+    assert reg.metrics() == [] and reg.spans() == []

@@ -1,0 +1,361 @@
+"""Observability layer: registry, exporters, validator, SNN telemetry.
+
+The contract under test (ISSUE 7):
+
+  * the metrics registry is thread-safe under concurrent increments and
+    histogram bucket edges are honoured exactly (``v <= edge`` lands in
+    that bucket);
+  * disabled mode emits NOTHING and hands out the shared no-op
+    instrument (the overhead policy call sites rely on);
+  * the JSONL exporter round-trips through ``read_jsonl`` and the
+    Prometheus exposition renders cumulative buckets;
+  * ``python -m repro.obs.validate`` accepts what ``--metrics`` emits
+    and rejects schema violations;
+  * ``TelemetryExecutor`` records the same per-layer spike rates as the
+    historical ``apply_with_rates`` instrumentation while leaving the
+    logits bit-exact, and the code-utilization histograms cover every
+    real (non-padding) weight.
+"""
+
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.registry import NULL_INSTRUMENT, MetricsRegistry
+
+
+# ---------------------------------------------------------------------------
+# registry: instruments
+# ---------------------------------------------------------------------------
+
+def test_counter_gauge_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("reqs_total", "help text")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError, match="cannot decrease"):
+        c.inc(-1)
+    g = reg.gauge("depth")
+    g.set(7)
+    g.set(3)
+    assert g.value == 3.0
+
+
+def test_instruments_are_cached_by_name_and_labels():
+    reg = MetricsRegistry()
+    a = reg.counter("compile_total", labels={"result": "miss"})
+    b = reg.counter("compile_total", labels={"result": "miss"})
+    c = reg.counter("compile_total", labels={"result": "hit"})
+    assert a is b and a is not c
+    a.inc()
+    assert b.value == 1.0 and c.value == 0.0
+    assert len(reg.metrics()) == 2
+
+
+def test_registry_rejects_kind_and_edge_conflicts():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("x")
+    reg.histogram("h", edges=(1.0, 2.0))
+    with pytest.raises(ValueError, match="already registered"):
+        reg.histogram("h", edges=(1.0, 3.0))
+    # same edges: cached handle comes back
+    assert reg.histogram("h", edges=(1.0, 2.0)) is reg.histogram(
+        "h", edges=(1.0, 2.0))
+
+
+def test_histogram_bucket_edges_inclusive_le():
+    """Prometheus ``le`` semantics: v == edge lands in that bucket."""
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", edges=(1.0, 2.0, 5.0))
+    for v in (0.5, 1.0, 1.5, 2.0, 5.0, 7.0):
+        h.observe(v)
+    #            <=1  <=2  <=5  +Inf
+    assert h.counts == [2, 2, 1, 1]
+    assert h.count == 6
+    assert h.sum == pytest.approx(17.0)
+
+
+def test_histogram_rejects_bad_edges():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError, match="ascending"):
+        reg.histogram("bad", edges=(2.0, 1.0))
+    with pytest.raises(ValueError, match="ascending"):
+        reg.histogram("empty", edges=())
+
+
+def test_thread_safety_under_concurrent_increments():
+    reg = MetricsRegistry()
+    c = reg.counter("hits")
+    h = reg.histogram("obs", edges=(0.5,))
+    n_threads, per_thread = 8, 2_000
+
+    def work():
+        for _ in range(per_thread):
+            c.inc()
+            h.observe(1.0)
+
+    threads = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == n_threads * per_thread
+    assert h.count == n_threads * per_thread
+    assert h.counts == [0, n_threads * per_thread]
+
+
+def test_span_ring_buffer_is_bounded():
+    reg = MetricsRegistry(max_spans=5)
+    for i in range(12):
+        reg.event("tick", i=i)
+    spans = reg.spans()
+    assert len(spans) == 5
+    assert [ev["i"] for ev in spans] == list(range(7, 12))
+    assert all(ev["ts_us"] >= 0 for ev in spans)
+    # timestamps are monotonic within the buffer
+    ts = [ev["ts_us"] for ev in spans]
+    assert ts == sorted(ts)
+
+
+# ---------------------------------------------------------------------------
+# disabled mode
+# ---------------------------------------------------------------------------
+
+def test_disabled_registry_emits_nothing():
+    reg = MetricsRegistry(enabled=False)
+    c = reg.counter("reqs_total")
+    g = reg.gauge("depth")
+    h = reg.histogram("lat", edges=(1.0,))
+    assert c is NULL_INSTRUMENT and g is NULL_INSTRUMENT \
+        and h is NULL_INSTRUMENT
+    c.inc()
+    g.set(3)
+    h.observe(1.0)
+    reg.event("enqueue", uid=0)
+    assert reg.metrics() == []
+    assert reg.spans() == []
+    snap = reg.snapshot()
+    assert snap == {"metrics": [], "spans": []}
+
+
+def test_default_registry_starts_disabled_and_toggles():
+    try:
+        assert not obs.default_registry().enabled
+        reg = obs.enable_default()
+        assert reg is obs.default_registry() and reg.enabled
+    finally:
+        obs.disable_default()
+    assert not obs.default_registry().enabled
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def _populated_registry() -> MetricsRegistry:
+    reg = MetricsRegistry()
+    reg.counter("reqs_total", "served").inc(5)
+    reg.gauge("depth", labels={"engine": "snn"}).set(2)
+    h = reg.histogram("lat_us", edges=(10.0, 100.0), help="latency")
+    for v in (5.0, 50.0, 500.0):
+        h.observe(v)
+    reg.event("enqueue", uid=0)
+    reg.event("drain", uid=0, latency_us=42.0)
+    return reg
+
+
+def test_jsonl_round_trip(tmp_path):
+    reg = _populated_registry()
+    path = obs.write_jsonl(reg, str(tmp_path / "m.jsonl"),
+                           meta={"entry": "test"})
+    doc = obs.read_jsonl(path)
+    assert doc["meta"]["schema"] == obs.SCHEMA_VERSION
+    assert doc["meta"]["entry"] == "test"
+    # metric snapshots survive the round trip exactly
+    want = {json.dumps(m, sort_keys=True) for m in reg.snapshot()["metrics"]}
+    got = {json.dumps(m, sort_keys=True) for m in doc["metrics"]}
+    assert got == want
+    assert [ev["event"] for ev in doc["spans"]] == ["enqueue", "drain"]
+    assert doc["spans"][1]["latency_us"] == 42.0
+    # ...and the emitted file itself validates
+    assert obs.validate_jsonl(path) == []
+
+
+def test_jsonl_disabled_registry_writes_meta_only(tmp_path):
+    path = obs.write_jsonl(MetricsRegistry(enabled=False),
+                           str(tmp_path / "empty.jsonl"))
+    doc = obs.read_jsonl(path)
+    assert doc["metrics"] == [] and doc["spans"] == []
+    assert obs.validate_jsonl(path) == []
+
+
+def test_prometheus_exposition():
+    text = obs.to_prometheus(_populated_registry())
+    assert "# TYPE reqs_total counter" in text
+    assert "reqs_total 5.0" in text
+    assert '# TYPE depth gauge' in text
+    assert 'depth{engine="snn"} 2.0' in text
+    assert "# HELP lat_us latency" in text
+    # cumulative buckets: 1 (<=10), 2 (<=100), 3 (+Inf)
+    assert 'lat_us_bucket{le="10"} 1' in text
+    assert 'lat_us_bucket{le="100"} 2' in text
+    assert 'lat_us_bucket{le="+Inf"} 3' in text
+    assert "lat_us_sum 555.0" in text
+    assert "lat_us_count 3" in text
+
+
+# ---------------------------------------------------------------------------
+# validator
+# ---------------------------------------------------------------------------
+
+def test_validate_rejects_schema_violations(tmp_path):
+    def check(lines):
+        p = tmp_path / "bad.jsonl"
+        p.write_text("\n".join(lines) + "\n")
+        return obs.validate_jsonl(str(p))
+
+    meta = json.dumps({"kind": "meta", "schema": obs.SCHEMA_VERSION})
+    assert check(["not json"])                    # parse error
+    assert check([json.dumps({"kind": "counter", "name": "x",
+                              "labels": {}, "value": 1})])  # no meta first
+    assert check([meta, json.dumps({"kind": "wat"})])       # unknown kind
+    assert check([meta, json.dumps(                          # counts desync
+        {"kind": "histogram", "name": "h", "labels": {},
+         "edges": [1.0], "counts": [1, 2], "sum": 3.0, "count": 5})])
+    assert check([meta, json.dumps(                          # len mismatch
+        {"kind": "histogram", "name": "h", "labels": {},
+         "edges": [1.0, 2.0], "counts": [1], "sum": 1.0, "count": 1})])
+    assert check([meta, json.dumps(
+        {"kind": "span", "ts_us": 1.0})])                    # span w/o event
+    assert check([meta, json.dumps(
+        {"kind": "gauge", "name": "g", "labels": {},
+         "value": "high"})])                                 # non-numeric
+    bad_schema = json.dumps({"kind": "meta", "schema": 999})
+    assert check([bad_schema])
+
+
+def test_validate_cli_exit_codes_and_requirements(tmp_path):
+    from repro.obs import validate as vcli
+
+    path = obs.write_jsonl(_populated_registry(), str(tmp_path / "m.jsonl"))
+    assert vcli.main([path]) == 0
+    assert vcli.main([path, "--require-spans", "enqueue,drain",
+                      "--require-metrics", "reqs_total,lat_us"]) == 0
+    assert vcli.main([path, "--require-spans", "missing_event"]) == 1
+    assert vcli.main([path, "--require-metrics", "missing_metric"]) == 1
+    assert vcli.main([str(tmp_path / "nope.jsonl")]) == 1
+
+
+# ---------------------------------------------------------------------------
+# SNN telemetry
+# ---------------------------------------------------------------------------
+
+def test_spike_stats_hand_example():
+    # (T=2, B=1, 3 units): unit0 fires both steps (saturated), unit1
+    # never (silent), unit2 once
+    s = jnp.asarray([[[1, 0, 1]], [[1, 0, 0]]], jnp.int32)
+    st = obs.spike_stats(s)
+    assert st["rate"] == pytest.approx(3 / 6)
+    assert st["saturation"] == pytest.approx(1 / 3)
+    assert st["silent"] == pytest.approx(1 / 3)
+    assert st["resets"] == 3
+
+
+@pytest.fixture(scope="module")
+def telemetry_setup():
+    from repro.deploy import deploy_config
+    from repro.models import snn_cnn
+
+    cfg = deploy_config("vgg9", bits=4, smoke=True)
+    params = snn_cnn.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    images = jnp.asarray(rng.random(
+        (2, cfg.img_size, cfg.img_size, cfg.in_channels)), jnp.float32)
+    return cfg, params, images
+
+
+def test_telemetry_matches_apply_with_rates(telemetry_setup):
+    """The wrapper records at the historical instrumentation points:
+    same layers, same rates, logits untouched."""
+    from repro.models import snn_cnn
+
+    cfg, params, images = telemetry_setup
+    ref_logits, ref_rates = snn_cnn.apply_with_rates(params, cfg, images)
+    reg = MetricsRegistry()
+    logits, records = obs.instrumented_forward(cfg, params, images,
+                                               registry=reg)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref_logits))
+    assert [r["rate"] for r in records] == pytest.approx(ref_rates)
+    assert [r["executor"] for r in records] == ["int"] * len(records)
+    # saturation <= rate <= 1 - silent, resets consistent with rate
+    for r in records:
+        assert 0.0 <= r["saturation"] <= r["rate"] <= 1.0 - r["silent"] + 1e-6
+        assert (r["resets"] > 0) == (r["rate"] > 0)
+    # metrics landed per layer
+    names = {m.snapshot()["name"] for m in reg.metrics()}
+    assert {"snn_layer_spike_rate", "snn_layer_saturation",
+            "snn_layer_silent", "snn_layer_resets_total",
+            "snn_layer_rates"} <= names
+    assert [ev["event"] for ev in reg.spans()] == \
+        ["layer_telemetry"] * len(records)
+
+
+def test_telemetry_wraps_packaged_executor(telemetry_setup):
+    from repro.deploy import deploy
+
+    cfg, params, images = telemetry_setup
+    model = deploy(params, cfg)
+    ref = np.asarray(model.apply(images))
+    logits, records = obs.instrumented_forward(
+        cfg, model.float_params, images, package=model,
+        registry=MetricsRegistry(enabled=False))
+    np.testing.assert_array_equal(np.asarray(logits), ref)
+    assert [r["executor"] for r in records] == ["packaged"] * len(records)
+
+
+def test_code_histogram_dense_and_conv():
+    from repro.quant.formats import PrecisionConfig
+    from repro.quant.ptq import quantize, quantize_conv
+
+    rng = np.random.default_rng(0)
+    pc = PrecisionConfig(bits=2)
+    w = jnp.asarray(rng.normal(size=(24, 16)), jnp.float32)
+    h = obs.code_histogram(quantize(w, pc))
+    assert len(h["counts"]) == 4 and h["qmin"] == -2
+    assert h["total"] == 24 * 16            # every logical weight counted
+    assert 0.0 < h["utilization"] <= 1.0
+    assert 0.0 <= h["clip_frac"] <= 1.0
+    assert sum(h["counts"]) == h["total"]
+
+    # conv with c_in NOT a multiple of 32: padding lanes are structural
+    # zeros and must NOT be counted as weights
+    wc = jnp.asarray(rng.normal(size=(3, 3, 5, 8)), jnp.float32)
+    hc = obs.code_histogram(quantize_conv(wc, PrecisionConfig(bits=4)))
+    assert hc["total"] == 3 * 3 * 5 * 8
+    assert len(hc["counts"]) == 16
+
+
+def test_package_code_utilization_emits_per_layer(telemetry_setup):
+    from repro.deploy import deploy
+
+    cfg, params, images = telemetry_setup
+    model = deploy(params, cfg)
+    reg = MetricsRegistry()
+    out = obs.package_code_utilization(model, registry=reg)
+    assert set(out) == set(model.layers)
+    for h in out.values():
+        assert h["bits"] == cfg.precision.bits
+        assert sum(h["counts"]) == h["total"] > 0
+    g = reg.gauge("snn_weight_code_utilization", labels={"layer": "fc1"})
+    assert 0.0 < g.value <= 1.0
+    hist = reg.histogram("snn_weight_code_utilization_hist",
+                         obs.FRACTION_EDGES)
+    assert hist.count == len(model.layers)
