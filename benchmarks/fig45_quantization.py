@@ -81,7 +81,7 @@ def _packed_bytes_fq(params, bits: int, gs: int) -> int:
     return total
 
 
-def run(quick: bool = False, smoke: bool = False):
+def run(quick: bool = False, smoke: bool = False, fusion=()):
     print("# --- Fig.4/5: precision vs accuracy vs memory ---")
     from repro.core.lif import LIFConfig
     from repro.train import optimizer as opt
@@ -142,7 +142,11 @@ def run(quick: bool = False, smoke: bool = False):
             # deployed eval run zero per-batch quantization, and the
             # packaged forward must match the per-call path bit for bit
             # (the graph-parity guard CI's graph-smoke leg relies on)
-            int_cfg = dataclasses.replace(cfg, int_deploy=True)
+            # fusion request rides on the deployed cfg only (training is
+            # group-blind); the parity assert below then checks the
+            # grouped packaged forward against the grouped per-call path
+            int_cfg = dataclasses.replace(cfg, int_deploy=True,
+                                          fusion=fusion)
             model = deploy(params, int_cfg)
             xb = jnp.asarray(x_te[:16])
             percall = snn_cnn.apply(params, int_cfg, xb)
@@ -196,5 +200,9 @@ if __name__ == "__main__":
                     help="reduced step/data budget")
     ap.add_argument("--smoke", action="store_true",
                     help="CI geometry: smallest budget that still trains")
+    ap.add_argument("--fusion", default="off", choices=("off", "auto"),
+                    help="deploy rows with planner-proposed multi-layer "
+                         "fusion groups (repro.graph.fusion)")
     args = ap.parse_args()
-    run(quick=args.quick, smoke=args.smoke)
+    run(quick=args.quick, smoke=args.smoke,
+        fusion="auto" if args.fusion == "auto" else ())

@@ -57,8 +57,8 @@ DEFAULT_SUITES = ("kernels_smoke", "serve")
 STRUCTURAL_KEYS = (
     "bits", "layers", "compiles", "recompiles_after_warmup", "batches",
     "T", "hw", "bytes", "hbm_bytes", "packed_bytes", "spike_bytes",
-    "dense_spike_bytes", "v5e_traffic_ratio", "vs_dense", "compression",
-    "host_timing_is_parity_check",
+    "dense_spike_bytes", "interlayer_hbm_bytes", "v5e_traffic_ratio",
+    "vs_dense", "compression", "host_timing_is_parity_check",
 )
 
 # absolute jitter floor: a "regression" under this many microseconds is

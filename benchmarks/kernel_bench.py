@@ -16,7 +16,8 @@ from benchmarks.bench_lib import emit, reset_records, time_call, write_json
 from repro.core import packing
 from repro.core.lif import lif_rollout_int
 from repro.core.nce import NCEConfig, NeuronComputeEngine
-from repro.kernels import fused_conv_ops, lif_step_ops, packed_qmatmul_ops
+from repro.kernels import fused_conv_ops, fused_group_ops, lif_step_ops
+from repro.kernels import packed_qmatmul_ops
 from repro.kernels import spike_matmul_ops, use_backend
 from repro.quant import PrecisionConfig, quantize, quantize_conv
 from repro.quant.ptq import unpack_conv_codes
@@ -163,6 +164,58 @@ def run(quick: bool = False, out: str | None = None):
               f"{us_u/us_f:.2f}x (same math on jnp backend), "
               f"v5e HBM traffic /{unfused_bytes/fused_bytes:.1f}")
 
+    # fused-group (multi-layer) vs per-layer fused rollout — the fusion-
+    # group kernel's win.  Both paths already fuse WITHIN each layer; the
+    # delta is the INTER-layer packed spike planes, which the per-layer
+    # chain writes to HBM and re-reads (interlayer_hbm_bytes) while the
+    # group kernel keeps them in VMEM (0 bytes).  Host timings are again
+    # a parity check on the jnp backend (identical per-member math).
+    for bits in (8, 2):
+        w1 = jax.random.normal(jax.random.PRNGKey(12), (3, 3, cin, cout))
+        w2 = jax.random.normal(jax.random.PRNGKey(13), (3, 3, cout, cout))
+        qg1 = quantize_conv(w1, PrecisionConfig(bits=bits))
+        qg2 = quantize_conv(w2, PrecisionConfig(bits=bits))
+        sp_g = packing.pack_bool(
+            (jax.random.uniform(jax.random.PRNGKey(14),
+                                (t_conv, b_img, hw, hw, cin)) < 0.2
+             ).astype(jnp.int32))
+        members = (("conv", qg1, 64), ("conv", qg2, 64))
+
+        def group_unfused(s, q1=qg1, q2=qg2):
+            _, s = fused_conv_ops.fused_conv_rollout(
+                s, q1, leak_shift=3, threshold_q=64)
+            return fused_conv_ops.fused_conv_rollout(
+                s, q2, leak_shift=3, threshold_q=64)
+
+        f_grp_fused = jax.jit(lambda s: fused_group_ops.fused_group_rollout(
+            s, members, leak_shift=3))
+        f_grp_unfused = jax.jit(group_unfused)
+        us_gf = time_call(f_grp_fused, sp_g)
+        us_gu = time_call(f_grp_unfused, sp_g)
+        w_bytes = (9 * cin * cout + 9 * cout * cout) * bits // 8
+        plane_in = t_conv * b_img * hw * hw * cin // 8
+        plane_mid = t_conv * b_img * hw * hw * cout // 8
+        plane_out = t_conv * b_img * hw * hw * cout // 8
+        v_out = b_img * hw * hw * cout * 4
+        # per-layer chain: layer 1 writes its packed planes + final
+        # membrane to HBM, layer 2 reads the planes back
+        interlayer = 2 * plane_mid + v_out
+        unfused_bytes = (w_bytes + plane_in + plane_out + v_out
+                         + interlayer)
+        fused_bytes = w_bytes + plane_in + plane_out + v_out
+        emit(f"kernel/group_rollout_unfused_w{bits}", us_gu,
+             f"T={t_conv};hw={hw};layers=2;hbm_bytes={unfused_bytes};"
+             f"interlayer_hbm_bytes={interlayer}")
+        emit(f"kernel/group_rollout_fused_w{bits}", us_gf,
+             f"T={t_conv};hw={hw};layers=2;hbm_bytes={fused_bytes};"
+             f"interlayer_hbm_bytes=0;"
+             f"v5e_traffic_ratio={unfused_bytes/fused_bytes:.1f}x;"
+             f"host_timing_is_parity_check=1")
+        print(f"  fused group rollout w{bits} (2 conv layers): host "
+              f"parity {us_gu/us_gf:.2f}x, inter-layer HBM spikes "
+              f"{interlayer} -> 0 bytes "
+              f"(total /{unfused_bytes/fused_bytes:.1f})")
+
     # interpret-mode Pallas correctness spot check at bench shapes
     with use_backend("interpret"):
         small_x = x[:64, :256]
@@ -184,6 +237,12 @@ def run(quick: bool = False, out: str | None = None):
              < 0.2).astype(jnp.int32))
         _ = fused_conv_ops.fused_conv_rollout(
             sp_conv, qct_small, leak_shift=3, threshold_q=64)
+        qct_small2 = quantize_conv(
+            jax.random.normal(jax.random.PRNGKey(15), (3, 3, 32, 32)),
+            PrecisionConfig(bits=4))
+        _ = fused_group_ops.fused_group_rollout(
+            sp_conv, (("conv", qct_small, 64), ("conv", qct_small2, 64)),
+            leak_shift=3)
     print("  pallas interpret spot-check at bench shapes: OK")
 
     # quick/smoke shapes are not comparable with the full-shape artifact,

@@ -174,8 +174,11 @@ def build_rows(kernels_path: Optional[str] = None,
             "measured": {"host_us": rec["us_per_call"]},
         })
     # fused-vs-unfused: predicted traffic ratio is the fusion claim; the
-    # measured host ratio must stay ~1 (same math on the jnp backend)
-    for fam in ("nce_rollout", "conv_rollout"):
+    # measured host ratio must stay ~1 (same math on the jnp backend).
+    # group_rollout is the multi-LAYER variant: its unfused twin is the
+    # per-layer fused_conv chain, so the ratio isolates the inter-layer
+    # spike-plane traffic the fusion group keeps in VMEM.
+    for fam in ("nce_rollout", "conv_rollout", "group_rollout"):
         for bits in (8, 2):
             fu = kernels.get(f"kernel/{fam}_fused_w{bits}")
             un = kernels.get(f"kernel/{fam}_unfused_w{bits}")

@@ -31,9 +31,18 @@ ap.add_argument("--bits", type=int, default=4, choices=(2, 4, 8))
 ap.add_argument("--model", default="vgg9",
                 choices=("vgg9", "vgg16", "resnet18"))
 ap.add_argument("--requests", type=int, default=16)
+ap.add_argument("--fusion", default="off", choices=("off", "auto"),
+                help="serve with planner-proposed multi-layer fusion "
+                     "groups (VMEM-resident chains; repro.graph.fusion)")
+ap.add_argument("--show-graph", action="store_true",
+                help="print the model graph incl. fusion-group "
+                     "membership + estimated VMEM footprint")
 args = ap.parse_args()
 
-cfg = deploy_config(args.model, args.bits, smoke=True)
+cfg = deploy_config(args.model, args.bits, smoke=True,
+                    fusion="auto" if args.fusion == "auto" else ())
+if args.show_graph:
+    print(cfg.graph().summary())
 params = snn_cnn.init(jax.random.PRNGKey(0), cfg)
 
 # 1. pack once

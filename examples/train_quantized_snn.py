@@ -33,6 +33,9 @@ ap.add_argument("--bits", type=int, default=4, choices=(2, 4, 8, 16))
 ap.add_argument("--steps", type=int, default=120)
 ap.add_argument("--smoke", action="store_true",
                 help="CI geometry: few steps, tiny model")
+ap.add_argument("--fusion", default="off", choices=("off", "auto"),
+                help="deploy with planner-proposed multi-layer fusion "
+                     "groups (VMEM-resident chains; repro.graph.fusion)")
 args = ap.parse_args()
 
 steps = 12 if args.smoke else args.steps
@@ -84,7 +87,12 @@ print(f"\nW{args.bits} (QAT forward) test accuracy: {acc*100:.1f}%")
 # bits=16 trains unquantized; deploy it at INT8 (PTQ).
 deploy_bits = args.bits if args.bits != 16 else 8
 int_cfg = dataclasses.replace(cfg, int_deploy=True,
-                              precision=PrecisionConfig(bits=deploy_bits))
+                              precision=PrecisionConfig(bits=deploy_bits),
+                              fusion="auto" if args.fusion == "auto" else ())
+if int_cfg.fusion:
+    groups = int_cfg.graph().groups
+    print(f"fusion: {len(groups)} group(s): "
+          + "; ".join(f"{g.name}={'+'.join(g.members)}" for g in groups))
 t0 = time.time()
 model = deploy(params, int_cfg)
 print(f"deployed W{deploy_bits} in {time.time()-t0:.2f}s: "
@@ -101,6 +109,17 @@ np.testing.assert_array_equal(
     np.asarray(packaged), np.asarray(percall),
     err_msg="packaged forward desyncs the per-call integer path")
 print("packaged forward == per-call integer forward (bit-exact)")
+
+# fusion groups are a lowering strategy, not a numeric change: the
+# grouped forward must match the ungrouped one bit for bit (CI's
+# fusion-smoke leg enforces this)
+if int_cfg.fusion:
+    ungrouped = snn_cnn.apply(
+        params, dataclasses.replace(int_cfg, fusion=()), xb)
+    np.testing.assert_array_equal(
+        np.asarray(percall), np.asarray(ungrouped),
+        err_msg="fusion groups changed the integer forward")
+    print("grouped forward == ungrouped forward (bit-exact)")
 
 int_logits = model.apply(jnp.asarray(x_te))
 int_acc = float(jnp.mean(jnp.argmax(int_logits, -1) == jnp.asarray(y_te)))

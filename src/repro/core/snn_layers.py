@@ -243,6 +243,56 @@ def spiking_conv_int_apply(
     return packing.unpack_bool(packed_out, qct.c_out)
 
 
+def spiking_conv_group_int_apply(
+    members,
+    spikes_t: jnp.ndarray,      # (T, B, H, W, C) — {0,1} binary spikes
+    lif: LIFConfig,
+    pc: PrecisionConfig,
+):
+    """Fusion-group twin of :func:`spiking_conv_int_apply`: a chain of
+    2+ stride-1 conv layers (with optional interleaved max pools) runs
+    its whole T-step rollout in ONE fused kernel call
+    (kernels/fused_group), so the 1-bit inter-member spike planes stay
+    in VMEM instead of round-tripping HBM between layers.
+
+    ``members`` is the executor-shaped chain: ``("conv", operands)``
+    entries carry the same operands dict the single-layer twin takes
+    (float ``params`` to quantize per call, or pre-packed ``qct`` +
+    ``threshold_q`` from a deploy package), ``("pool", window)`` entries
+    the pool window.  Thresholds fold exactly as the single-layer twin;
+    the chain is bit-exact with composing :func:`spiking_conv_int_apply`
+    and :func:`maxpool_t` member by member.
+
+    Returns (T, B, HoF, WoF, c_outF) {0,1} int32 spikes.
+    """
+    from repro.kernels import fused_group_ops
+
+    chain = []
+    last_c_out = None
+    for m in members:
+        if m[0] == "conv":
+            _, operands = m
+            qct = operands.get("qct")
+            if qct is None:
+                qct = pack_conv_weights(operands["params"], pc)
+            if qct.bits != pc.bits:
+                raise ValueError(f"packed weights are {qct.bits}-bit, "
+                                 f"precision asks for {pc.bits}-bit")
+            theta = operands.get("threshold_q")
+            if theta is None:
+                theta = _fold_threshold_q(qct.scale, lif)
+            chain.append(("conv", qct, theta))
+            last_c_out = qct.c_out
+        else:
+            chain.append(("pool", m[1]))
+    packed_in = packing.pack_bool(spikes_t.astype(jnp.int32))
+    _, packed_out = fused_group_ops.fused_group_rollout(
+        packed_in, tuple(chain),
+        leak_shift=lif.leak_shift, soft_reset=lif.soft_reset,
+    )
+    return packing.unpack_bool(packed_out, last_c_out)
+
+
 def avgpool_t(spikes_t: jnp.ndarray, window: int = 2) -> jnp.ndarray:
     """Average pooling applied per timestep (keeps spike statistics)."""
 

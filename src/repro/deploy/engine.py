@@ -176,6 +176,16 @@ class SNNServeEngine:
                                          obs.LATENCY_EDGES_US,
                                          "enqueue -> drain")
 
+    def graph_summary(self) -> str:
+        """The served model's declarative graph, one line per node —
+        including fusion-group membership + per-group VMEM footprint
+        when the package's cfg carries fusion annotations (the engine's
+        compiled forwards lower those chains through the fused group
+        kernel)."""
+        from repro.graph import build_graph
+
+        return build_graph(self.cfg).summary()
+
     # -- compile plumbing ----------------------------------------------------
 
     def _build_forward(self):

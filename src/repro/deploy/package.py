@@ -53,7 +53,13 @@ from repro.quant.formats import (
     QuantizedTensor,
 )
 
-PACKAGE_FORMAT_VERSION = 1
+PACKAGE_FORMAT_VERSION = 2
+# v1: per-layer operands only (pre-fusion).  v2 adds the "groups"
+# manifest section — per-fusion-group operand bundles (member order,
+# datapath width, VMEM working set, bundle bytes) — and the cfg's
+# ``fusion`` request.  v1 packages still load: they simply carry no
+# groups, lowering layer by layer exactly as they always did.
+COMPAT_FORMAT_VERSIONS = (1, 2)
 
 
 # ---------------------------------------------------------------------------
@@ -157,6 +163,27 @@ class DeployedModel:
     def compression_ratio(self) -> float:
         return self.nbytes_dense_fp32() / max(self.nbytes_packed(), 1)
 
+    def _group_manifest(self):
+        """Per-fusion-group operand bundles for the v2 manifest: member
+        order, datapath width, estimated VMEM working set, and the
+        bundle's packed bytes (the members' weight+theta payload the
+        fused rollout streams in together)."""
+        from repro.graph import build_graph, group_vmem_bytes
+
+        graph = build_graph(self.cfg)
+        bundles = []
+        for g in graph.groups:
+            bundles.append({
+                "name": g.name,
+                "members": list(g.members),
+                "bits": self.cfg.precision.bits,
+                "vmem_bytes": int(group_vmem_bytes(graph, g)),
+                "packed_bytes": sum(
+                    self.layers[m].nbytes_packed()
+                    for m in g.members if m in self.layers),
+            })
+        return bundles
+
     # -- persistence -----------------------------------------------------------
     def save(self, path: str) -> str:
         """Write the package as one flat npz (see module docstring)."""
@@ -165,6 +192,7 @@ class DeployedModel:
             "version": PACKAGE_FORMAT_VERSION,
             "cfg": _cfg_to_dict(self.cfg),
             "layers": {},
+            "groups": self._group_manifest(),
             "float_params": [],
         }
         for name, lp in self.layers.items():
@@ -190,7 +218,7 @@ def load(path: str) -> DeployedModel:
     """Rebuild a :class:`DeployedModel` from :meth:`DeployedModel.save`."""
     with np.load(path, allow_pickle=False) as z:
         manifest = json.loads(str(z["__manifest__"][()]))
-        if manifest["version"] != PACKAGE_FORMAT_VERSION:
+        if manifest["version"] not in COMPAT_FORMAT_VERSIONS:
             raise ValueError(
                 f"package format v{manifest['version']} != "
                 f"v{PACKAGE_FORMAT_VERSION} reader")
@@ -279,19 +307,24 @@ def deploy(params, cfg) -> DeployedModel:
     return DeployedModel(cfg=cfg, float_params=float_params, layers=layers)
 
 
-def deploy_config(model: str = "vgg9", bits: int = 4, smoke: bool = True):
+def deploy_config(model: str = "vgg9", bits: int = 4, smoke: bool = True,
+                  fusion=()):
     """The int-deploy ``SNNConfig`` every serve entry point shares:
     reduced smoke geometry (CI-sized, matches the kernel test configs)
     or the paper-size model.  Keeps the launcher, benchmark, and example
-    measuring the same model."""
+    measuring the same model.  ``fusion`` is the multi-layer fusion
+    request (``()`` / ``"auto"`` / explicit member tuples — see
+    repro.graph.fusion)."""
     from repro.models.snn_cnn import SNNConfig
 
+    fusion = _normalize_fusion(fusion)
     pc = PrecisionConfig(bits=bits)
     if smoke:
         return SNNConfig(model=model, img_size=16, timesteps=3,
                          scale=0.15, n_classes=4, int_deploy=True,
-                         precision=pc)
-    return SNNConfig(model=model, int_deploy=True, precision=pc)
+                         precision=pc, fusion=fusion)
+    return SNNConfig(model=model, int_deploy=True, precision=pc,
+                     fusion=fusion)
 
 
 # ---------------------------------------------------------------------------
@@ -303,12 +336,22 @@ def _cfg_to_dict(cfg) -> Dict:
     return dataclasses.asdict(cfg)
 
 
+def _normalize_fusion(fusion):
+    """Hashable form of a fusion request: JSON round-trips tuples as
+    lists, and SNNConfig must stay hashable (it keys graph/jit caches)."""
+    if isinstance(fusion, str) or not fusion:
+        return fusion if fusion else ()
+    return tuple(tuple(m) for m in fusion)
+
+
 def _cfg_from_dict(d: Dict):
     from repro.models.snn_cnn import SNNConfig
 
     d = dict(d)
     d["lif"] = LIFConfig(**d["lif"])
     d["precision"] = PrecisionConfig(**d["precision"])
+    # absent in v1 manifests (pre-fusion packages lower layer by layer)
+    d["fusion"] = _normalize_fusion(d.get("fusion", ()))
     return SNNConfig(**d)
 
 

@@ -22,6 +22,13 @@ from repro.graph.build import (         # noqa: F401
     resnet_graph,
     vgg_graph,
 )
+from repro.graph.fusion import (        # noqa: F401
+    apply_fusion,
+    body_group,
+    group_vmem_bytes,
+    plan_fusion_groups,
+    validate_group,
+)
 from repro.graph.executors import (     # noqa: F401
     Executor,
     FloatExecutor,
@@ -39,6 +46,7 @@ from repro.graph.spec import (          # noqa: F401
     Conv,
     Dense,
     Encode,
+    FusionGroup,
     LayerSpec,
     ModelGraph,
     Pool,

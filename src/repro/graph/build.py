@@ -121,10 +121,20 @@ def resnet_graph(cfg) -> ModelGraph:
 @functools.lru_cache(maxsize=64)
 def build_graph(cfg) -> ModelGraph:
     """The family dispatch every shim goes through.  Memoized: configs
-    are frozen (hashable) dataclasses and graphs are immutable."""
+    are frozen (hashable) dataclasses and graphs are immutable.
+
+    A config carrying a ``fusion`` request (``"auto"`` or explicit member
+    tuples — see repro.graph.fusion) gets its groups planned/validated
+    here, so every consumer of the graph sees the same annotation."""
     if cfg.model == "resnet18":
-        return resnet_graph(cfg)
-    if cfg.model in ("vgg9", "vgg16"):
-        return vgg_graph(cfg)
-    raise ValueError(f"unknown model family {cfg.model!r} "
-                     "(known: vgg9, vgg16, resnet18)")
+        g = resnet_graph(cfg)
+    elif cfg.model in ("vgg9", "vgg16"):
+        g = vgg_graph(cfg)
+    else:
+        raise ValueError(f"unknown model family {cfg.model!r} "
+                         "(known: vgg9, vgg16, resnet18)")
+    fusion = getattr(cfg, "fusion", ())
+    if fusion:
+        from repro.graph.fusion import apply_fusion  # local: no cycle
+        g = apply_fusion(g, fusion)
+    return g

@@ -43,10 +43,12 @@ from repro.core.snn_layers import (
     maxpool_t,
     readout_apply,
     spiking_conv_apply,
+    spiking_conv_group_int_apply,
     spiking_conv_int_apply,
     spiking_dense_apply,
     spiking_dense_int_apply,
 )
+from repro.graph import fusion as _fusion
 from repro.graph.spec import (
     Conv,
     Dense,
@@ -75,6 +77,12 @@ class Executor:
 
     kind = "base"
 
+    #: whether this lowering consumes :class:`FusionGroup` annotations
+    #: (multi-layer VMEM-resident rollouts).  Fusion is an integer-
+    #: datapath deployment concept: the float/BPTT twin always lowers
+    #: per layer, so grouped and ungrouped training are identical.
+    supports_groups = False
+
     def __init__(self, graph: ModelGraph, params):
         self.graph = graph
         self.cfg = graph.cfg
@@ -101,11 +109,25 @@ class Executor:
 
     def residual(self, spec: Residual, x: jnp.ndarray) -> jnp.ndarray:
         self.trace.append(("residual", spec.name, spec.stride))
-        h = x
-        for body_conv in spec.body:
-            h = self.conv(body_conv, h)
+        group = _fusion.body_group(self.graph, spec) \
+            if (self.graph.groups and self.supports_groups) else None
+        if group is not None:
+            # body chain as one fused rollout; the shortcut still reads
+            # the pre-body plane, so only the body joins the group
+            h = self.fused_group(group, spec.body, x)
+        else:
+            h = x
+            for body_conv in spec.body:
+                h = self.conv(body_conv, h)
         sc = self.conv(spec.proj, x) if spec.proj is not None else x
         return self._merge(h, sc)
+
+    def fused_group(self, group, specs, x: jnp.ndarray) -> jnp.ndarray:
+        """Lower a whole fusion group's member chain in one kernel call.
+        Only group-aware lowerings implement this; ``run_graph`` and
+        ``residual`` never route here unless ``supports_groups``."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not lower fusion groups")
 
     def dense(self, spec: Dense, x: jnp.ndarray) -> jnp.ndarray:
         self.trace.append(("dense", spec.name, 1))
@@ -167,6 +189,24 @@ class IntExecutor(FloatExecutor):
     traffic stays 1-bit packable."""
 
     kind = "int"
+    supports_groups = True
+
+    def fused_group(self, group, specs, x: jnp.ndarray) -> jnp.ndarray:
+        """One fused kernel call for the whole member chain: inter-member
+        1-bit planes stay in VMEM (kernels/fused_group).  Trace rows are
+        the SAME per-member rows the ungrouped lowering records — fusion
+        changes where planes live, not which layers exist, so the
+        executor-parity contract on traces is preserved."""
+        members = []
+        for spec in specs:
+            if isinstance(spec, Conv):
+                self.trace.append(("conv", spec.name, spec.stride))
+                members.append(("conv", self._operands(spec, "qct")))
+            else:
+                self.trace.append(("pool", spec.name, 1))
+                members.append(("pool", spec.window))
+        return spiking_conv_group_int_apply(members, x, self.lif,
+                                            self.cfg.precision)
 
     def _operands(self, spec, key: str) -> dict:
         """Where the packed layer's weights come from — the one hook the
@@ -232,9 +272,33 @@ def run_graph(graph: ModelGraph, executor: Executor, images: jnp.ndarray,
     layer's mean firing rate — recorded after every top-level Conv,
     after every Residual merge, and after every Dense, matching the
     historical ``apply_with_rates`` instrumentation points.
+
+    Fusion groups: when the graph carries :class:`FusionGroup`
+    annotations and the executor ``supports_groups``, each top-level
+    group's member chain lowers through ``executor.fused_group`` in one
+    kernel call (residual-body groups are handled inside
+    ``Executor.residual``).  ``rates`` needs every member's output
+    plane, which a fused chain keeps in VMEM, so rate-instrumented runs
+    lower top-level groups per member — bit-exact with the fused chain,
+    just with the HBM round trips the instrumentation requires.
     """
+    fused_at = {}
+    if graph.groups and executor.supports_groups and rates is None:
+        top_index = {node.name: i for i, node in enumerate(graph.nodes)}
+        for g in graph.groups:
+            if g.members[0] in top_index:       # residual bodies are not
+                fused_at[top_index[g.members[0]]] = g
+
     x: jnp.ndarray = images
-    for node in graph.nodes:
+    i = 0
+    while i < len(graph.nodes):
+        node = graph.nodes[i]
+        group = fused_at.get(i)
+        if group is not None:
+            specs = graph.nodes[i:i + len(group.members)]
+            x = executor.fused_group(group, specs, x)
+            i += len(group.members)
+            continue
         if isinstance(node, Encode):
             x = executor.encode(node, x)
         elif isinstance(node, Conv):
@@ -253,6 +317,7 @@ def run_graph(graph: ModelGraph, executor: Executor, images: jnp.ndarray,
             return executor.readout(node, x)
         else:  # pragma: no cover — new spec kinds must be wired here
             raise TypeError(f"no lowering for node {type(node).__name__}")
+        i += 1
     raise ValueError("graph has no Readout node")
 
 

@@ -134,16 +134,45 @@ class Readout(LayerSpec):
 
 
 @dataclasses.dataclass(frozen=True)
+class FusionGroup:
+    """A declarative multi-layer fusion annotation: the named member
+    layers' full T-step rollouts run in ONE fused kernel call
+    (kernels/fused_group), so the 1-bit inter-member spike planes stay in
+    VMEM and never touch HBM.
+
+    ``members`` are flat dotted layer names in execution order — a
+    contiguous chain of stride-1 post-stem Convs (optionally interleaved
+    with / ended by Pools) entirely inside one region: all top-level
+    nodes, or exactly one Residual block's body.  Legality (contiguity,
+    residual boundaries, precision, VMEM budget) is checked by
+    ``repro.graph.fusion.validate_group``; build one via
+    ``plan_fusion_groups``/``apply_fusion`` rather than by hand.
+
+    ``bits`` optionally pins the member weights' precision; it must match
+    the graph cfg's quantized precision (a group cannot mix precisions —
+    the packed planes chain through one datapath width).
+    """
+
+    name: str
+    members: Tuple[str, ...]
+    bits: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
 class ModelGraph:
     """One SNN architecture: an ordered node tuple + the cfg it was built
     for.  ``n_init_keys`` pins the family's historical RNG key schedule
     (vgg: one key per plan item + 2; resnet: a fixed split of 64) so
     graph_init's draws are bit-identical with the pre-graph init code.
+
+    ``groups`` annotates multi-layer fusion (see :class:`FusionGroup`);
+    an empty tuple lowers exactly as before the annotation existed.
     """
 
     cfg: object                       # SNNConfig (duck-typed, no cycle)
     nodes: Tuple[LayerSpec, ...]
     n_init_keys: int
+    groups: Tuple[FusionGroup, ...] = ()
 
     # -- traversal helpers ---------------------------------------------------
     def iter_flat(self) -> Iterator[LayerSpec]:
@@ -183,35 +212,68 @@ class ModelGraph:
         macs = sum(spec.macs for spec in self.param_specs())
         return macs * self.cfg.timesteps
 
+    @staticmethod
+    def _row(spec: LayerSpec) -> Tuple:
+        """One topology row for a flattened node."""
+        if isinstance(spec, Encode):
+            return ("encode", spec.timesteps)
+        if isinstance(spec, Conv):
+            return ("conv", spec.name, spec.c_in, spec.c_out,
+                    spec.k, spec.stride, spec.out_hw, spec.stem)
+        if isinstance(spec, Pool):
+            return ("pool", spec.window)
+        if isinstance(spec, Residual):
+            return ("residual", spec.name, spec.stride,
+                    spec.proj is not None)
+        if isinstance(spec, Dense):
+            return ("dense", spec.name, spec.d_in, spec.d_out)
+        if isinstance(spec, Readout):
+            return ("readout", spec.name, spec.d_in, spec.d_out,
+                    spec.spatial_mean)
+        raise TypeError(f"no topology row for {type(spec).__name__}")
+
     def topology(self) -> Tuple[Tuple, ...]:
         """Hashable geometry fingerprint — one row per flattened node.
         The golden-topology tests pin this, so any graph edit that would
         silently desync count_macs or deploy geometry fails loudly."""
-        rows = []
-        for spec in self.iter_flat():
-            if isinstance(spec, Encode):
-                rows.append(("encode", spec.timesteps))
-            elif isinstance(spec, Conv):
-                rows.append(("conv", spec.name, spec.c_in, spec.c_out,
-                             spec.k, spec.stride, spec.out_hw, spec.stem))
-            elif isinstance(spec, Pool):
-                rows.append(("pool", spec.window))
-            elif isinstance(spec, Residual):
-                rows.append(("residual", spec.name, spec.stride,
-                             spec.proj is not None))
-            elif isinstance(spec, Dense):
-                rows.append(("dense", spec.name, spec.d_in, spec.d_out))
-            elif isinstance(spec, Readout):
-                rows.append(("readout", spec.name, spec.d_in, spec.d_out,
-                             spec.spatial_mean))
+        rows = [self._row(spec) for spec in self.iter_flat()]
+        # fusion-group boundaries are part of the lowering plan: grouped
+        # and ungrouped graphs must never alias in a compile cache keyed
+        # on this fingerprint.  Appended after the node rows, so the
+        # golden pins of ungrouped topologies are untouched.
+        for g in self.groups:
+            rows.append(("fusion", g.name) + tuple(g.members))
         return tuple(rows)
 
+    def spec_by_name(self, name: str) -> LayerSpec:
+        """Resolve a flattened node by its dotted name (fusion members
+        reference Residual body convs this way)."""
+        for spec in self.iter_flat():
+            if spec.name == name:
+                return spec
+        raise KeyError(f"no node named {name!r} in the graph")
+
     def summary(self) -> str:
-        """Human-readable one-line-per-node description."""
+        """Human-readable one-line-per-node description, with fusion
+        groups' membership + estimated VMEM footprint appended."""
         lines = [f"ModelGraph({self.cfg.model}, T={self.cfg.timesteps}, "
                  f"img={self.cfg.img_size})"]
-        for row in self.topology():
-            lines.append("  " + " ".join(str(c) for c in row))
+        grouped = {m: g.name for g in self.groups for m in g.members}
+        for spec in self.iter_flat():
+            tag = f"   [{grouped[spec.name]}]" if spec.name in grouped \
+                else ""
+            lines.append(
+                "  " + " ".join(str(c) for c in self._row(spec)) + tag)
+        if self.groups:
+            from repro.graph import fusion as _fusion  # local: no cycle
+            from repro.kernels import vmem as _vmem
+            for g in self.groups:
+                est = _fusion.group_vmem_bytes(self, g)
+                lines.append(
+                    f"  fusion {g.name}: {' + '.join(g.members)} "
+                    f"(~{_vmem.format_bytes(est)} VMEM of "
+                    f"{_vmem.format_bytes(_vmem.vmem_budget_bytes())} "
+                    f"budget; inter-member spikes never touch HBM)")
         return "\n".join(lines)
 
 

@@ -1,6 +1,6 @@
 """Pallas TPU kernels for L-SPINE's compute hot-spots.
 
-Five kernel families, each with <name>/kernel.py (pl.pallas_call +
+Six kernel families, each with <name>/kernel.py (pl.pallas_call +
 BlockSpec), ops.py (backend-dispatched public API) and ref.py (pure-jnp
 oracle) — see README.md in this directory for the family contract:
 
@@ -18,6 +18,12 @@ oracle) — see README.md in this directory for the family contract:
                    unpack, MXU binary x int accumulate, VMEM-resident
                    membrane, 1-bit channel-axis spike re-pack.  Extends the
                    low-precision datapath to the CNN benchmark models.
+  fused_group    — fused_conv across LAYERS: a fusion group's whole chain
+                   of stride-1 convs (+ interleaved max pools) rolls out
+                   all T timesteps in ONE pallas_call, each member with
+                   its own VMEM membrane scratch, so the 1-bit inter-
+                   member spike planes never touch HBM.  Lowered from
+                   ModelGraph fusion annotations (repro.graph.fusion).
 
 Backend dispatch (every ops.py follows the same three-way rule, selected
 by repro.kernels.backend):
@@ -35,6 +41,7 @@ never change the visible bits.
 
 from repro.kernels.backend import get_backend, set_backend, use_backend
 from repro.kernels.fused_conv import ops as fused_conv_ops
+from repro.kernels.fused_group import ops as fused_group_ops
 from repro.kernels.fused_nce import ops as fused_nce_ops
 from repro.kernels.lif_step import ops as lif_step_ops
 from repro.kernels.packed_qmatmul import ops as packed_qmatmul_ops
@@ -45,6 +52,7 @@ __all__ = [
     "set_backend",
     "use_backend",
     "fused_conv_ops",
+    "fused_group_ops",
     "fused_nce_ops",
     "lif_step_ops",
     "packed_qmatmul_ops",

@@ -34,8 +34,13 @@ spike bits and zero weight codes are inert in the accumulate, and the
 words match ``packing.pack_bool`` bit-for-bit.
 
 Spatial tiling (Ho blocks with halo DMA) is a follow-up — one batch
-element's plane must currently fit the per-tile VMEM budget, which holds
-for the paper's 32x32 CNN workloads.
+element's plane must fit the per-tile VMEM budget, which holds for the
+paper's 32x32 CNN workloads.  That assumption is now an explicit check:
+the working set (kernels/vmem.py — the same formula the fusion planner
+budgets groups with) is validated against ``vmem_budget_bytes()`` and an
+oversized geometry raises ``ValueError`` here instead of emitting a
+kernel that cannot fit; ops.py pre-checks the same number and falls back
+to the unfused reference path, so model-level callers degrade gracefully.
 """
 
 from __future__ import annotations
@@ -48,6 +53,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import packing
+from repro.kernels import vmem as _vmem
 
 
 def _fused_conv_kernel(s_ref, w_ref, th_ref, v_ref, o_ref, v_acc,
@@ -166,6 +172,21 @@ def fused_conv_rollout_pallas(
         raise ValueError(
             f"theta_q must be (1, {n}) per-channel thresholds, "
             f"got {theta_q.shape} (caller ops.py must pad)")
+    need = _vmem.conv_rollout_vmem_bytes(
+        hp=hp, wp=(wpw * 32) // cin_pad, cin_pad=cin_pad, kh=kh, kw=kw,
+        ho=ho, wo=wo, n=bn, bits=bits)
+    budget = _vmem.vmem_budget_bytes()
+    if need > budget:
+        raise ValueError(
+            f"fused_conv working set exceeds the per-core VMEM budget: "
+            f"needs ~{_vmem.format_bytes(need)} > "
+            f"{_vmem.format_bytes(budget)} for plane "
+            f"{hp}x{(wpw * 32) // cin_pad}x{cin_pad} (padded), "
+            f"k={kh}x{kw}, out {ho}x{wo}, bn={bn}, w{bits} — the kernel "
+            f"would miscompile/spill rather than stay VMEM-resident.  "
+            f"Dispatch through fused_conv_ops to fall back to the "
+            f"unfused path, or raise REPRO_VMEM_BUDGET if your core has "
+            f"more VMEM.")
     grid = (b, n // bn, t_steps)
     kernel = functools.partial(
         _fused_conv_kernel,

@@ -12,10 +12,17 @@ convolution uses), pads c_out to a ``bn`` tile multiple, flattens the
 element, then slices the padding back off.  Zero spike words are inert
 in the accumulate and the kernel masks spikes of padded channels, so
 padding never changes the visible bits.
+
+Geometry too large for the kernel's VMEM working set (kernels/vmem.py —
+the single budget formula shared with the kernel's own check and the
+fusion planner) falls back to the unfused reference path with a
+``RuntimeWarning`` instead of emitting a kernel that cannot stay
+resident; calling kernel.py directly with such geometry raises.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Tuple
 
 import jax.numpy as jnp
@@ -23,6 +30,7 @@ import jax.numpy as jnp
 from repro.core import packing
 from repro.core.lif import as_theta_vector
 from repro.kernels import backend as _backend
+from repro.kernels import vmem as _vmem
 from repro.kernels.fused_conv import kernel as _kernel
 from repro.kernels.fused_conv import ref as _ref
 from repro.quant.formats import QuantizedConvTensor
@@ -94,6 +102,27 @@ def fused_conv_rollout(
     # one c_out tile if the layer is narrower than the default bn
     bn_eff = min(bn, _round_up(qct.c_out, 32))
     n_pad = _round_up(qct.c_out, bn_eff)
+
+    # explicit VMEM residency check (the budget the fusion planner and
+    # the kernel's own ValueError share): oversized geometry degrades to
+    # the bit-exact unfused reference path instead of miscompiling
+    need = _vmem.conv_rollout_vmem_bytes(
+        hp=hp, wp=wp, cin_pad=qct.c_in_pad, kh=qct.kh, kw=qct.kw,
+        ho=ho, wo=wo, n=bn_eff, bits=qct.bits)
+    budget = _vmem.vmem_budget_bytes()
+    if need > budget:
+        warnings.warn(
+            f"fused_conv geometry (plane {hp}x{wp}x{qct.c_in_pad} padded, "
+            f"out {ho}x{wo}, bn={bn_eff}, w{qct.bits}) needs "
+            f"~{_vmem.format_bytes(need)} of VMEM > budget "
+            f"{_vmem.format_bytes(budget)}; falling back to the unfused "
+            f"reference path (bit-exact, but per-timestep HBM traffic)",
+            RuntimeWarning, stacklevel=2)
+        return _ref.fused_conv_rollout_ref(
+            spikes_packed_t, qct, stride=stride, padding=padding,
+            leak_shift=leak_shift, threshold_q=theta,
+            v_reset_q=v_reset_q, soft_reset=soft_reset,
+        )
     wpk = jnp.pad(qct.data, ((0, n_pad - qct.c_out), (0, 0)))
     # padded channels' theta value is irrelevant: their spikes are masked
     # by n_out inside the kernel before the reset uses theta

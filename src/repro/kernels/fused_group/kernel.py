@@ -1,0 +1,263 @@
+"""Pallas TPU kernel: multi-layer fused-group spiking rollout.
+
+The fused_conv design extended across layers: ALL T timesteps of a
+fusion group — a chain of stride-1 SAME convs with optional interleaved
+max pools — run in a single ``pallas_call``, so the 1-bit inter-member
+spike planes live and die in VMEM and NEVER touch HBM.  Dataflow per
+batch element:
+
+    grid (B, T), T innermost
+    t-th step:
+      packed input plane (1, 1, H, W*wc) --VPU shift/mask--> (H, W, Cp0)
+      for each member in the chain:
+        conv: pad SAME -> im2col (k*k strided slices) -> patches
+              packed weights --VPU unpack--> codes INTb
+              MXU: i_syn = patches @ Wq^T      int8 x int8 -> int32
+              VPU: LIF on this member's OWN VMEM membrane scratch
+              spike plane stays an int8 VMEM value -> next member's input
+        pool: non-overlapping window max (an OR for {0,1} planes)
+      final plane re-packed to 1-bit channel words, written to HBM
+
+Each conv member keeps its int32 membrane tile (H_i*W_i, n_i) in its own
+VMEM scratch for the whole T-step scan (T is the innermost grid dim, so
+scratch persists across t).  Per timestep the only HBM traffic is ONE
+packed input plane and ONE packed output plane — the per-layer chain of
+fused_conv calls additionally writes + re-reads every intermediate
+member's packed planes through HBM each rollout.
+
+Weights for every member stay resident per batch element (index maps
+constant in t), fetched once, exactly like fused_conv.
+
+Geometry contract (enforced by ops.py): every conv is stride 1 with SAME
+padding (pad lo = (k-1)//2 — the exact amounts ref.conv_pads derives),
+channels chain 32-padded (member i's padded c_out IS member i+1's
+cin_pad; padded channels carry masked-to-zero spikes and zero weight
+codes, so they are inert), pools divide their plane exactly.  The whole
+working set must fit the shared VMEM budget (kernels/vmem.py — the same
+formula the fusion planner uses); oversized chains raise here and fall
+back to the per-layer reference in ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import packing
+from repro.kernels import vmem as _vmem
+
+# geom rows (static, hashable):
+#   ("conv", bits, k, cin_pad, h, w, n_pad, n_out)   h/w: in == out dims
+#   ("pool", window, h, w, c_pad)                    h/w: input dims
+
+
+def _conv_geoms(geoms) -> Tuple:
+    return tuple(g for g in geoms if g[0] == "conv")
+
+
+def _geom_vmem_dicts(geoms):
+    out = []
+    for g in geoms:
+        if g[0] == "conv":
+            _, bits, k, cin_pad, h, w, n_pad, _ = g
+            out.append({"kind": "conv", "h": h, "w": w, "cin_pad": cin_pad,
+                        "kh": k, "kw": k, "n": n_pad, "bits": bits})
+        else:
+            _, window, h, w, c_pad = g
+            out.append({"kind": "pool", "h": h, "w": w, "c": c_pad,
+                        "window": window})
+    return out
+
+
+def _fused_group_kernel(*refs, geoms, leak_shift: int, v_reset_q: int,
+                        soft_reset: bool):
+    convs = _conv_geoms(geoms)
+    n_conv = len(convs)
+    s_ref = refs[0]
+    w_refs = refs[1:1 + 2 * n_conv:2]
+    th_refs = refs[2:2 + 2 * n_conv:2]
+    v_ref, o_ref = refs[1 + 2 * n_conv], refs[2 + 2 * n_conv]
+    v_accs = refs[3 + 2 * n_conv:]
+
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        for acc in v_accs:
+            acc[...] = jnp.zeros_like(acc)
+
+    # unpack the group's input plane (the one per-timestep HBM read)
+    _, _, _, cin_pad0, h0, w0, _, _ = convs[0]
+    s_words = s_ref[0, 0]                       # (H, W*wc)
+    x = packing.unpack(s_words, 1, s_words.shape[1] * 32)
+    x = x.reshape(h0, w0, cin_pad0).astype(jnp.int8)
+
+    ci = 0
+    v_last = None
+    for g in geoms:
+        if g[0] == "conv":
+            _, bits, k, cin_pad, h, w, n_pad, n_out = g
+            pad_lo = (k - 1) // 2
+            pad_hi = k - 1 - pad_lo
+            xp = jnp.pad(x, ((pad_lo, pad_hi), (pad_lo, pad_hi), (0, 0)))
+            # im2col: one slice per tap, (kh, kw, cin) order — the same
+            # layout quantize_conv flattens the weight taps in
+            taps = []
+            for di in range(k):
+                for dj in range(k):
+                    taps.append(jax.lax.slice(
+                        xp, (di, dj, 0), (di + h, dj + w, cin_pad)))
+            patches = jnp.concatenate(taps, axis=-1).reshape(
+                h * w, k * k * cin_pad)
+
+            w_words = w_refs[ci][...]           # (n_pad, K*bits/32)
+            vpw = packing.WORD_BITS // bits
+            wq = packing.unpack(w_words, bits,
+                                w_words.shape[-1] * vpw).astype(jnp.int8)
+            i_syn = jax.lax.dot_general(
+                patches, wq,
+                dimension_numbers=(((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32,
+            )                                   # (H*W, n_pad)
+
+            theta = th_refs[ci][...]            # (1, n_pad)
+            v = v_accs[ci][...]
+            v = v - (v >> leak_shift) + i_syn
+            spikes = (v >= theta).astype(jnp.int32)
+            # spikes of zero-padded output channels are masked so the
+            # next member (and the final pack) sees pack_bool-exact bits
+            col = jax.lax.broadcasted_iota(jnp.int32, spikes.shape, 1)
+            spikes = jnp.where(col < n_out, spikes, 0)
+            if soft_reset:
+                v = v - spikes * theta
+            else:
+                v = jnp.where(spikes == 1, jnp.int32(v_reset_q), v)
+            v_accs[ci][...] = v
+            v_last = v
+            # the inter-member handoff: a VMEM value, never an HBM write
+            x = spikes.reshape(h, w, n_pad).astype(jnp.int8)
+            ci += 1
+        else:
+            _, window, h, w, c_pad = g
+            # non-overlapping window max == the binary-preserving OR
+            # pool maxpool_t applies between unfused layers
+            x = x.reshape(h // window, window, w // window, window,
+                          c_pad).max(axis=(1, 3))
+
+    hf, wf, cf = x.shape
+    v_ref[0] = v_last           # last conv's membrane, constant-in-t map
+    o_ref[0, 0] = packing.pack_bool(
+        x.reshape(hf * wf, cf).astype(jnp.int32))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("geoms", "leak_shift", "v_reset_q", "soft_reset",
+                     "interpret"),
+)
+def fused_group_rollout_pallas(
+    spikes_packed_t: jnp.ndarray,   # (T, B, H, W*wc) int32, unpadded plane
+    *packed_operands: jnp.ndarray,  # per conv member: w_packed, theta_q
+    geoms: Tuple,
+    leak_shift: int,
+    v_reset_q: int = 0,
+    soft_reset: bool = True,
+    interpret: bool = False,
+):
+    t_steps, b, h_in, wcw = spikes_packed_t.shape
+    convs = _conv_geoms(geoms)
+    if len(packed_operands) != 2 * len(convs):
+        raise ValueError(
+            f"{len(convs)} conv members need {2 * len(convs)} packed "
+            f"operands (w, theta per member), got {len(packed_operands)}")
+    _, bits0, _, cin_pad0, h0, w0, _, _ = convs[0]
+    if geoms[0][0] != "conv":
+        raise ValueError("a fusion group starts at a conv member")
+    if (h_in, wcw) != (h0, w0 * cin_pad0 // 32):
+        raise ValueError(
+            f"input plane {h_in}x{wcw} words does not match the first "
+            f"member's geometry {h0}x{w0}x{cin_pad0} (caller ops.py "
+            f"flattens (W, words))")
+    for gi, g in enumerate(convs):
+        _, bits, k, cin_pad, h, w, n_pad, n_out = g
+        wp, th = packed_operands[2 * gi], packed_operands[2 * gi + 1]
+        vpw = packing.WORD_BITS // bits
+        if wp.shape != (n_pad, k * k * cin_pad * bits // 32):
+            raise ValueError(
+                f"member {gi}: packed weights {wp.shape} != "
+                f"({n_pad}, {k * k * cin_pad * bits // 32}) for geom {g}")
+        if th.shape != (1, n_pad):
+            raise ValueError(f"member {gi}: theta {th.shape} != (1, {n_pad})")
+        if n_pad % 32 or cin_pad % 32:
+            raise ValueError("caller ops.py must 32-pad channels")
+
+    need = _vmem.group_rollout_vmem_bytes(_geom_vmem_dicts(geoms))
+    budget = _vmem.vmem_budget_bytes()
+    if need > budget:
+        raise ValueError(
+            f"fused group working set exceeds the per-core VMEM budget: "
+            f"needs ~{_vmem.format_bytes(need)} > "
+            f"{_vmem.format_bytes(budget)} for chain {geoms} — dispatch "
+            f"through fused_group_ops (or the fusion planner) to split "
+            f"or fall back instead of miscompiling.")
+
+    # final plane geometry (after any trailing pool)
+    hf, wf, cf = h0, w0, convs[0][6]
+    for g in geoms:
+        if g[0] == "conv":
+            hf, wf, cf = g[4], g[5], g[6]
+        else:
+            hf, wf = hf // g[1], wf // g[1]
+    lc = convs[-1]
+    _, _, _, _, h_lc, w_lc, n_lc, _ = lc
+
+    kernel = functools.partial(
+        _fused_group_kernel, geoms=geoms, leak_shift=leak_shift,
+        v_reset_q=v_reset_q, soft_reset=soft_reset)
+
+    in_specs = [pl.BlockSpec((1, 1, h_in, wcw), lambda i, t: (t, i, 0, 0))]
+    for gi, g in enumerate(convs):
+        n_pad, kwords = g[6], g[2] * g[2] * g[3] * g[1] // 32
+        in_specs.append(
+            pl.BlockSpec((n_pad, kwords), lambda i, t: (0, 0)))
+        in_specs.append(pl.BlockSpec((1, n_pad), lambda i, t: (0, 0)))
+
+    flops = sum(2 * t_steps * b * g[4] * g[5] * g[2] * g[2] * g[3] * g[6]
+                for g in convs)
+    w_bytes = sum(packed_operands[2 * gi].size * 4
+                  for gi in range(len(convs)))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, t_steps),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, h_lc * w_lc, n_lc), lambda i, t: (i, 0, 0)),
+            pl.BlockSpec((1, 1, hf * wf, cf // 32),
+                         lambda i, t: (t, i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h_lc * w_lc, n_lc), jnp.int32),
+            jax.ShapeDtypeStruct((t_steps, b, hf * wf, cf // 32),
+                                 jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((g[4] * g[5], g[6]), jnp.int32)
+                        for g in convs],
+        # batch elements are independent; T carries every member's
+        # membrane recurrence through scratch and must stay sequential
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        cost_estimate=pl.CostEstimate(
+            flops=flops,
+            bytes_accessed=(spikes_packed_t.size * 4     # planes in
+                            + b * w_bytes                # weights, per b
+                            + b * h_lc * w_lc * n_lc * 4  # membrane out
+                            + t_steps * b * hf * wf * cf // 8),  # out
+            transcendentals=0,
+        ),
+        interpret=interpret,
+    )(spikes_packed_t, *packed_operands)

@@ -1,0 +1,86 @@
+"""Pure-jnp oracle for the multi-layer fused-group rollout.
+
+A fusion group is a chain of stride-1 SAME-padded spiking convs with
+optional interleaved 2x2 (window) max pools, all T timesteps of the
+WHOLE chain in one kernel call (kernel.py).  The oracle is the honest
+per-layer composition the group kernel replaces — each member through
+the existing single-layer fused_conv reference, planes re-packed to
+1-bit words between members (exactly the HBM round trip the fused
+kernel eliminates):
+
+    for each member:
+      conv:  (v, packed) = fused_conv_rollout_ref(packed, qct, stride=1)
+      pool:  packed -> unpack -> per-timestep max window -> pack
+
+The group kernel must reproduce this bit for bit: int32 accumulation,
+floor-shift leak, soft/hard reset, pack_bool word layout, for bits in
+{2, 4, 8} and any legal chain.  Returns the LAST conv member's final
+membrane plus the chain's packed output spikes.
+
+Member encoding (shared with ops.py):
+
+    ("conv", qct: QuantizedConvTensor, theta_q: (c_out,) int32)
+    ("pool", window: int)
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.kernels.fused_conv import ref as _conv_ref
+
+
+def _maxpool_packed(packed_t: jnp.ndarray, c: int,
+                    window: int) -> jnp.ndarray:
+    """Per-timestep spatial max pool of a packed (T, B, H, W, words)
+    spike train — binary-preserving (an OR over the window)."""
+    s = packing.unpack_bool(packed_t, c)
+
+    def pool(x):
+        return jax.lax.reduce_window(
+            x, jnp.array(0, x.dtype), jax.lax.max,
+            (1, window, window, 1), (1, window, window, 1), "VALID")
+
+    t, b = s.shape[:2]
+    pooled = pool(s.reshape(t * b, *s.shape[2:]))
+    pooled = pooled.reshape(t, b, *pooled.shape[1:])
+    return packing.pack_bool(pooled)
+
+
+def fused_group_rollout_ref(
+    spikes_packed_t: jnp.ndarray,   # (T, B, H, W, ceil(c_in/32)) int32
+    members: Sequence[Tuple],
+    *,
+    leak_shift: int,
+    v_reset_q: int = 0,
+    soft_reset: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-layer composition of the group chain.
+
+    Returns (v_last: (B, Ho, Wo, c_out) int32 — the LAST conv member's
+    final membrane, pre-pool if a pool follows it — and
+    out_spikes_packed: (T, B, HoF, WoF, ceil(c_outF/32)) int32, the
+    chain's final packed planes).
+    """
+    x = spikes_packed_t
+    v_last = None
+    ch = None
+    for m in members:
+        if m[0] == "conv":
+            _, qct, theta = m
+            v_last, x = _conv_ref.fused_conv_rollout_ref(
+                x, qct, stride=1, padding="SAME",
+                leak_shift=leak_shift, threshold_q=theta,
+                v_reset_q=v_reset_q, soft_reset=soft_reset)
+            ch = qct.c_out
+        elif m[0] == "pool":
+            x = _maxpool_packed(x, ch, m[1])
+        else:
+            raise ValueError(f"unknown group member kind {m[0]!r}")
+    if v_last is None:
+        raise ValueError("a fusion group needs at least one conv member")
+    return v_last, x

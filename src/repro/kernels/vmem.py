@@ -1,0 +1,127 @@
+"""Shared VMEM budget accounting for the fused rollout kernels.
+
+The fused kernels' entire win is VMEM residency: the membrane tile (and,
+for fusion groups, every inter-layer spike plane) lives in on-chip
+scratch for the whole T-step rollout.  That only works if the working
+set actually fits — a TPU core has ~16 MB of VMEM (see
+/opt/skills/guides), and a kernel whose scratch + operand blocks exceed
+it either fails to compile or silently spills.  Historically
+kernels/fused_conv assumed one batch element's plane fits ("fine at the
+paper's 32x32, broken beyond"); this module makes that assumption an
+explicit, shared number:
+
+  * :func:`conv_rollout_vmem_bytes` — the per-(batch, c_out-tile) VMEM
+    working set of one fused conv rollout, from static geometry alone.
+  * :func:`group_rollout_vmem_bytes` — the same for a multi-layer fusion
+    group (kernels/fused_group), where every member's membrane scratch
+    and the largest inter-layer plane are simultaneously resident.
+  * :func:`vmem_budget_bytes` — the budget both the kernels (loud
+    ``ValueError`` / unfused fallback) and the fusion planner
+    (``repro.graph.fusion`` group legality) check against.  One number,
+    one formula site: the planner can never admit a group the kernel
+    would refuse.
+
+The default budget leaves headroom under the 16 MB core limit for the
+compiler's own double-buffering and semaphores; override with the
+``REPRO_VMEM_BUDGET`` env var (bytes) for experiments or tests.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, Sequence
+
+# ~16 MB/core on current TPU generations; budget 12 MB so the Mosaic
+# compiler keeps room for pipelining buffers and stack
+VMEM_BYTES_PER_CORE = 16 * 1024 * 1024
+DEFAULT_BUDGET_BYTES = 12 * 1024 * 1024
+
+_ENV_VAR = "REPRO_VMEM_BUDGET"
+
+
+def vmem_budget_bytes() -> int:
+    """The per-core VMEM byte budget fused kernels must fit in.
+    ``REPRO_VMEM_BUDGET`` (bytes) overrides the default — used by tests
+    to exercise the over-budget paths without allocating real memory."""
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        try:
+            return int(env)
+        except ValueError as e:
+            raise ValueError(
+                f"{_ENV_VAR}={env!r} is not an integer byte count") from e
+    return DEFAULT_BUDGET_BYTES
+
+
+def conv_rollout_vmem_bytes(*, hp: int, wp: int, cin_pad: int, kh: int,
+                            kw: int, ho: int, wo: int, n: int,
+                            bits: int) -> int:
+    """VMEM working set of one fused conv rollout step, per (batch,
+    c_out-tile) grid cell, from static geometry.
+
+    ``hp``/``wp`` are the pre-padded plane dims, ``cin_pad`` the 32-padded
+    input channels, ``n`` the resident c_out extent (the tile size ``bn``
+    for the single-layer kernel, the full padded c_out for a fusion-group
+    member), ``bits`` the weight precision.  Counts every simultaneously
+    live buffer of kernels/fused_conv/kernel.py:
+
+      packed input plane block     hp * wp * cin_pad / 8      (int32 words)
+      unpacked spike plane         hp * wp * cin_pad          (int8)
+      im2col patches               ho * wo * kh*kw*cin_pad    (int8)
+      packed weight block          n * kh*kw*cin_pad * bits/8
+      unpacked weight codes        n * kh*kw*cin_pad          (int8)
+      i_syn + membrane scratch + v out block: 3 * ho*wo*n * 4 (int32)
+      theta row + packed out block (small, counted for completeness)
+    """
+    k_flat = kh * kw * cin_pad
+    return (hp * wp * cin_pad // 8          # packed plane block
+            + hp * wp * cin_pad             # unpacked plane (int8)
+            + ho * wo * k_flat              # im2col patches (int8)
+            + n * k_flat * bits // 8        # packed weights
+            + n * k_flat                    # unpacked weight codes (int8)
+            + 3 * ho * wo * n * 4           # i_syn + v scratch + v out
+            + n * 4                         # theta row
+            + ho * wo * (n // 32 or 1) * 4)  # packed out block
+
+
+def group_rollout_vmem_bytes(members: Sequence[Dict]) -> int:
+    """VMEM working set of a multi-layer fusion-group rollout (one batch
+    element, all members' membranes resident at once).
+
+    ``members`` is a sequence of geometry dicts:
+
+      {"kind": "conv", "h", "w", "cin_pad", "kh", "kw", "n", "bits"}
+          h/w are the member's (unpadded) input plane dims — stride-1
+          SAME convs, so output dims equal input dims; ``n`` is the
+          32-padded c_out.
+      {"kind": "pool", "h", "w", "c", "window"}
+          c is the (padded) channel count of the pooled plane.
+
+    Conv members contribute their full single-layer working set with the
+    plane padded to h+kh-1 (every buffer is live while that member
+    computes, and its membrane scratch stays live for the whole group);
+    pool members contribute one plane buffer.  The sum is conservative —
+    buffers of *different* members mostly don't coexist except the
+    membrane scratches — which is the right direction for a budget.
+    """
+    total = 0
+    for m in members:
+        if m["kind"] == "conv":
+            total += conv_rollout_vmem_bytes(
+                hp=m["h"] + m["kh"] - 1, wp=m["w"] + m["kw"] - 1,
+                cin_pad=m["cin_pad"], kh=m["kh"], kw=m["kw"],
+                ho=m["h"], wo=m["w"], n=m["n"], bits=m["bits"])
+        elif m["kind"] == "pool":
+            total += m["h"] * m["w"] * m["c"]        # int8 plane
+        else:
+            raise ValueError(f"unknown member kind {m['kind']!r}")
+    return total
+
+
+def format_bytes(n: int) -> str:
+    """Human-readable byte count for error messages and summaries."""
+    if n >= 1024 * 1024:
+        return f"{n / (1024 * 1024):.1f} MiB"
+    if n >= 1024:
+        return f"{n / 1024:.1f} KiB"
+    return f"{n} B"

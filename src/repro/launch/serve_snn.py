@@ -31,7 +31,12 @@ def main():
                          "before serving, exercising the artifact path)")
     ap.add_argument("--show-graph", action="store_true",
                     help="print the declarative model graph (the one "
-                         "topology the train/int/packaged lowerings share)")
+                         "topology the train/int/packaged lowerings share), "
+                         "including fusion-group membership + VMEM footprint")
+    ap.add_argument("--fusion", default="off", choices=("off", "auto"),
+                    help="multi-layer fusion: 'auto' plans VMEM-resident "
+                         "fusion groups (repro.graph.fusion) so grouped "
+                         "layers' inter-member spikes never touch HBM")
     add_profile_flag(ap, "/tmp/repro_trace/serve_snn")
     add_metrics_flag(ap, "/tmp/repro_metrics/serve_snn.jsonl")
     args = ap.parse_args()
@@ -52,7 +57,8 @@ def main():
     # construction time (no-op handles otherwise)
     registry = obs.enable_default() if args.metrics else None
 
-    cfg = deploy_config(args.model, args.bits, smoke=args.smoke)
+    cfg = deploy_config(args.model, args.bits, smoke=args.smoke,
+                        fusion="auto" if args.fusion == "auto" else ())
     if args.show_graph:
         print(cfg.graph().summary())
     params = snn_cnn.init(jax.random.PRNGKey(0), cfg)

@@ -67,6 +67,12 @@ class SNNConfig:
     # (kernels/fused_conv + fused_nce) instead of the float/fake-quant
     # training twins.  Requires a quantized ``precision``.
     int_deploy: bool = False
+    # multi-layer fusion request (repro.graph.fusion.apply_fusion):
+    # () = none, "auto" = planner-proposed groups, or an explicit
+    # tuple-of-member-name-tuples.  Must stay hashable (configs key
+    # caches) — lists are normalized to tuples by deploy_config / the
+    # package loader.  Only the integer lowerings consume it.
+    fusion: object = ()
 
     def ch(self, c: int) -> int:
         return max(8, int(c * self.scale))

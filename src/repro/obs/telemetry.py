@@ -94,6 +94,10 @@ class TelemetryExecutor:
     def trace(self):
         return self.inner.trace
 
+    @property
+    def supports_groups(self):
+        return getattr(self.inner, "supports_groups", False)
+
     def encode(self, spec, images):
         return self.inner.encode(spec, images)
 
@@ -112,6 +116,16 @@ class TelemetryExecutor:
 
     def dense(self, spec, x):
         return self._record("dense", spec.name, self.inner.dense(spec, x))
+
+    def fused_group(self, group, specs, x):
+        """A fused chain's interior planes never leave VMEM, so interior
+        members cannot be sampled individually — the group is recorded as
+        ONE aggregate row at its boundary (its final spike planes), named
+        after the group.  Interior telemetry therefore coarsens under
+        fusion rather than silently disappearing; ungroup (fusion=()) to
+        sample per layer again."""
+        return self._record("fusion_group", group.name,
+                            self.inner.fused_group(group, specs, x))
 
     def _record(self, kind: str, name: str, spikes_t):
         stats = spike_stats(spikes_t)
