@@ -27,14 +27,28 @@ except ImportError:        # … or `from benchmarks import serve_bench`
 
 
 def run(smoke: bool = True, model: str = "vgg9", requests: int = 24,
-        max_batch: int = 8, out: str | None = None) -> str:
+        max_batch: int = 8, out: str | None = None,
+        metrics: str | None = None,
+        metrics_port: int | None = None) -> str:
     import jax
     import numpy as np
 
+    from repro import obs
     from repro.deploy import (
         SNNEngineConfig, SNNRequest, SNNServeEngine, deploy, deploy_config,
     )
     from repro.models import snn_cnn
+
+    # --metrics/--metrics-port turn the live plane on for the bench run
+    # itself (watch a bench from a browser tab); without them the
+    # default registry stays disabled and the engines keep their no-op
+    # instruments — the timings the gate diffs are unchanged either way.
+    live = metrics is not None or metrics_port is not None
+    registry = obs.enable_default() if live else obs.default_registry()
+    server = None
+    if metrics_port is not None:
+        server = obs.ObsServer(registry, port=metrics_port)
+        print(f"[obs] serving http://127.0.0.1:{server.start()}/metrics")
 
     bench_lib.reset_records()      # suites must not inherit stale records
     print("name,us_per_call,derived")
@@ -69,6 +83,12 @@ def run(smoke: bool = True, model: str = "vgg9", requests: int = 24,
 
         # mixed-size request stream through the bucket-cached engine
         eng = SNNServeEngine(packed, SNNEngineConfig(max_batch=max_batch))
+        # default-threshold watchdog: zero trips is part of the bench
+        # record (a healthy run must not burn its SLO) — with the
+        # registry disabled no rule ever finds an instrument and the
+        # count stays 0 for free
+        wdog = obs.Watchdog(registry)
+        eng.attach_watchdog(wdog)
         eng.warmup()
         warm_compiles = eng.compile_count
         rng = np.random.default_rng(bits)
@@ -98,8 +118,22 @@ def run(smoke: bool = True, model: str = "vgg9", requests: int = 24,
             # request latency goes and how much compute padding burns
             f";queue_avg_ms={stats['queue_avg_ms']:.2f}"
             f";compute_avg_ms={stats['compute_avg_ms']:.2f}"
-            f";padding_waste={stats['padding_waste']:.3f}")
+            f";padding_waste={stats['padding_waste']:.3f}"
+            # live-plane health (informational): a healthy bench run
+            # must not trip the SLO/drift watchdog or overflow the ring
+            f";watchdog_trips={wdog.trips_total}"
+            f";span_drops={registry.span_stats()['dropped']}")
 
+    if metrics is not None:
+        path = obs.write_jsonl(registry, metrics,
+                               meta={"entry": "serve_bench",
+                                     "model": model})
+        trace = obs.export_chrome_trace(
+            registry, metrics + ".trace.json",
+            meta={"entry": "serve_bench", "model": model})
+        print(f"[obs] metrics written to {path}, Chrome trace to {trace}")
+    if server is not None:
+        server.stop()
     return bench_lib.write_json("serve" if smoke else "serve_full",
                                 path=out)
 
@@ -118,9 +152,14 @@ def main():
     ap.add_argument("--out", default=None,
                     help="write BENCH json here instead of the committed "
                          "baseline path (what the CI gate leg does)")
+    from repro.obs import add_metrics_flag, add_server_flag
+
+    add_metrics_flag(ap, "/tmp/repro_metrics/serve_bench.jsonl")
+    add_server_flag(ap)
     args = ap.parse_args()
     run(smoke=args.smoke, model=args.model, requests=args.requests,
-        max_batch=args.max_batch, out=args.out)
+        max_batch=args.max_batch, out=args.out, metrics=args.metrics,
+        metrics_port=args.metrics_port)
 
 
 if __name__ == "__main__":

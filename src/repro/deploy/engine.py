@@ -175,6 +175,37 @@ class SNNServeEngine:
         self._m_latency_us = m.histogram("snn_serve_latency_us",
                                          obs.LATENCY_EDGES_US,
                                          "enqueue -> drain")
+        # optional SLO/drift watchdog (obs/watchdog.py) — checked once
+        # per microbatch, after the batch's instruments are current
+        self._watchdog = None
+
+    def attach_watchdog(self, watchdog) -> None:
+        """Attach an :class:`repro.obs.Watchdog`; ``step()`` evaluates
+        its rules once per microbatch and ``health()`` folds its state
+        into /healthz."""
+        self._watchdog = watchdog
+
+    def health(self) -> dict:
+        """Liveness payload for the /healthz endpoint: queue depth,
+        compile-cache state, running totals, watchdog state."""
+        body = {
+            "queue_depth": len(self.queue),
+            "undrained_results": len(self.done),
+            "requests_total": self.total_requests,
+            "batches_total": self.total_batches,
+            "compile_cache": {
+                "buckets": [int(b) for b in self.buckets],
+                "compiled": sorted(int(b) for b in self._compiled),
+                "compiles": self.compile_count,
+            },
+            "model": {
+                "name": self.cfg.model, "bits": self.cfg.precision.bits,
+                "timesteps": self.cfg.timesteps,
+            },
+        }
+        if self._watchdog is not None:
+            body["watchdog"] = self._watchdog.health()
+        return body
 
     def graph_summary(self) -> str:
         """The served model's declarative graph, one line per node —
@@ -316,6 +347,10 @@ class SNNServeEngine:
                            queue_us=req.queue_s * 1e6,
                            compute_us=req.compute_s * 1e6,
                            latency_us=req.latency_s * 1e6)
+        if self._watchdog is not None:
+            # after the drain loop: the histograms/gauges the rules read
+            # already include this microbatch
+            self._watchdog.check()
         return n
 
     def pop_result(self, uid: int) -> SNNRequest:

@@ -34,6 +34,7 @@ from repro.graph.executors import (     # noqa: F401
     FloatExecutor,
     IntExecutor,
     PackagedExecutor,
+    WrappedExecutor,
     executor_for,
     run_graph,
 )

@@ -259,6 +259,50 @@ class PackagedExecutor(IntExecutor):
         return {"params": None, key: lp.qt, "threshold_q": lp.theta_q}
 
 
+class WrappedExecutor:
+    """Delegating base for instrumenting wrappers (obs telemetry, obs
+    time attribution): forwards every node method plus ``trace`` /
+    ``supports_groups`` to ``inner``, so :func:`run_graph` sees a normal
+    executor and any lowering (including future ones) can be wrapped
+    without touching graph code.  Subclasses override exactly the node
+    methods they want to observe; the trace stays on the inner executor,
+    so executor-parity tests hold through any wrapper stack."""
+
+    kind = "wrapped"
+
+    def __init__(self, inner):
+        self.inner = inner
+
+    @property
+    def trace(self):
+        return self.inner.trace
+
+    @property
+    def supports_groups(self):
+        return getattr(self.inner, "supports_groups", False)
+
+    def encode(self, spec, images):
+        return self.inner.encode(spec, images)
+
+    def conv(self, spec, x):
+        return self.inner.conv(spec, x)
+
+    def pool(self, spec, x):
+        return self.inner.pool(spec, x)
+
+    def residual(self, spec, x):
+        return self.inner.residual(spec, x)
+
+    def fused_group(self, group, specs, x):
+        return self.inner.fused_group(group, specs, x)
+
+    def dense(self, spec, x):
+        return self.inner.dense(spec, x)
+
+    def readout(self, spec, x):
+        return self.inner.readout(spec, x)
+
+
 # ---------------------------------------------------------------------------
 # the shared traversal
 # ---------------------------------------------------------------------------

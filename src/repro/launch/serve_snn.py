@@ -5,6 +5,16 @@ The spiking counterpart of launch/serve.py — packs a model once with
 through the bucket-cached :class:`~repro.deploy.engine.SNNServeEngine`.
 
 Run:  PYTHONPATH=src python -m repro.launch.serve_snn [--full] [--bits 4]
+
+The live observability plane (obs/README.md) hangs off three flags:
+``--metrics-port`` starts the in-process HTTP server (/metrics,
+/healthz, /spans) for scraping DURING the run; ``--trace`` exports the
+span ring as a Chrome/Perfetto trace on exit; ``--hold S`` keeps the
+server (and process) alive S extra seconds after serving so an external
+scraper can catch the final state — the CI obs-smoke leg curls inside
+that window.  Any of ``--metrics``/``--metrics-port``/``--trace``
+enables the registry; with none of them the hot path keeps its no-op
+instruments.
 """
 
 from __future__ import annotations
@@ -15,7 +25,7 @@ import argparse
 def main():
     from repro.configs import add_geometry_flags
     from repro.launch.profiling import add_profile_flag, maybe_trace
-    from repro.obs import add_metrics_flag
+    from repro.obs import add_metrics_flag, add_server_flag
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="vgg9",
@@ -39,6 +49,23 @@ def main():
                          "layers' inter-member spikes never touch HBM")
     add_profile_flag(ap, "/tmp/repro_trace/serve_snn")
     add_metrics_flag(ap, "/tmp/repro_metrics/serve_snn.jsonl")
+    add_server_flag(ap)
+    ap.add_argument("--trace", nargs="?",
+                    const="/tmp/repro_metrics/serve_snn.trace.json",
+                    default=None, metavar="PATH",
+                    help="export the span ring as a Chrome trace_event "
+                         "JSON on exit (load in chrome://tracing or "
+                         "ui.perfetto.dev); validate with "
+                         "python -m repro.obs.validate PATH --trace")
+    ap.add_argument("--slo-p95-ms", type=float, default=250.0,
+                    help="watchdog p95 latency SLO (ms)")
+    ap.add_argument("--watchdog-dir", default="",
+                    help="flight-recorder artifact directory; empty = no "
+                         "artifacts on trip")
+    ap.add_argument("--hold", type=float, default=0.0, metavar="S",
+                    help="keep the process (and --metrics-port server) "
+                         "alive S seconds after serving, for external "
+                         "scrapes")
     args = ap.parse_args()
 
     import time
@@ -54,8 +81,11 @@ def main():
     from repro.models import snn_cnn
 
     # enable BEFORE constructing the engine — instruments bind at
-    # construction time (no-op handles otherwise)
-    registry = obs.enable_default() if args.metrics else None
+    # construction time (no-op handles otherwise).  Any live-plane flag
+    # implies the registry.
+    metrics_on = bool(args.metrics or args.trace
+                      or args.metrics_port is not None)
+    registry = obs.enable_default() if metrics_on else None
 
     cfg = deploy_config(args.model, args.bits, smoke=args.smoke,
                         fusion="auto" if args.fusion == "auto" else ())
@@ -76,10 +106,56 @@ def main():
 
     eng = SNNServeEngine(model, SNNEngineConfig(
         max_batch=args.max_batch, data_parallel=args.data_parallel))
+
+    server = None
+    if args.metrics_port is not None:
+        server = obs.ObsServer(registry, port=args.metrics_port,
+                               health_fn=eng.health)
+        port = server.start()
+        print(f"[obs] serving http://127.0.0.1:{port}/metrics "
+              f"(/healthz, /spans?since=N)")
+
     n_exe = eng.warmup()
     print(f"warmup compiled {n_exe} bucket executables: {eng.buckets}")
 
     rng = np.random.default_rng(0)
+    sample = jax.numpy.asarray(rng.random(
+        (2, cfg.img_size, cfg.img_size,
+         cfg.in_channels)).astype(np.float32))
+
+    if metrics_on:
+        # Model telemetry is a SAMPLED eager pass (spike stats are host
+        # floats — under jit they would be tracers), one per run, not
+        # per request.  It runs BEFORE serving because its per-layer
+        # spike rates double as the watchdog's calibration snapshot:
+        # live drift is judged against what the model did at deploy
+        # time, and the attribution pass puts snn_layer_time_us on
+        # /metrics before the first scrape.
+        _, layer_records = obs.instrumented_forward(
+            cfg, model.float_params, sample, package=model,
+            registry=registry)
+        for row in layer_records:
+            print(f"[obs] {row['layer']:<12} rate={row['rate']:.3f} "
+                  f"saturation={row['saturation']:.3f} "
+                  f"silent={row['silent']:.3f} resets={row['resets']}")
+        calibration = {row["layer"]: row["rate"] for row in layer_records}
+
+        _, timed_records = obs.timed_forward(
+            cfg, model.float_params, sample, package=model,
+            registry=registry)
+        summ = obs.attribution_summary(timed_records)
+        print(f"[obs] attribution: {summ['nodes']} nodes, "
+              f"{summ['wall_us'] / 1e3:.1f}ms measured vs "
+              f"{summ['predicted_us']:.1f}us roofline "
+              f"(hottest {summ['hottest_layer']} "
+              f"{summ['hottest_wall_us'] / 1e3:.1f}ms)")
+
+        watchdog = obs.Watchdog(
+            registry, calibration=calibration,
+            cfg=obs.WatchdogConfig(slo_p95_ms=args.slo_p95_ms,
+                                   artifact_dir=args.watchdog_dir or None))
+        eng.attach_watchdog(watchdog)
+
     for uid in range(args.requests):
         eng.add_request(SNNRequest(
             uid=uid,
@@ -98,31 +174,43 @@ def main():
           f"compute avg={stats['compute_avg_ms']:.1f}ms, "
           f"padding waste={stats['padding_waste']:.0%})")
 
-    if args.metrics:
-        # model telemetry is a SAMPLED eager pass (spike stats are host
-        # floats — under jit they would be tracers), one per run, not
-        # per request: per-layer spike rate / saturation / resets on a
-        # sample batch, plus the packed weights' code-space utilization
-        sample = jax.numpy.asarray(rng.random(
-            (2, cfg.img_size, cfg.img_size,
-             cfg.in_channels)).astype(np.float32))
-        _, layer_records = obs.instrumented_forward(
-            cfg, model.float_params, sample, package=model,
-            registry=registry)
-        for row in layer_records:
-            print(f"[obs] {row['layer']:<12} rate={row['rate']:.3f} "
-                  f"saturation={row['saturation']:.3f} "
-                  f"silent={row['silent']:.3f} resets={row['resets']}")
+    if metrics_on:
         util = obs.package_code_utilization(model, registry=registry)
         for name, h in util.items():
             print(f"[obs] {name:<12} W{h['bits']} code util "
                   f"{h['utilization']:.2f} clip {h['clip_frac']:.3f}")
+        wd = eng._watchdog
+        tripped = sorted({t["rule"] for t in wd.trips})
+        print(f"[obs] watchdog: {wd.trips_total} trips"
+              + (f" ({', '.join(tripped)})" if tripped else ""))
+
+    if args.hold > 0:
+        print(f"[obs] holding {args.hold:.0f}s for external scrapes "
+              "(ctrl-c to stop early)")
+        deadline = time.perf_counter() + args.hold
+        try:
+            while time.perf_counter() < deadline:
+                time.sleep(0.2)
+        except KeyboardInterrupt:
+            pass
+
+    if args.metrics:
         out = obs.write_jsonl(registry, args.metrics,
                               meta={"entry": "serve_snn",
                                     "model": args.model,
                                     "bits": args.bits})
         print(f"[obs] metrics written to {out} — validate with "
               f"`python -m repro.obs.validate {out}`")
+    if args.trace:
+        out = obs.export_chrome_trace(registry, args.trace,
+                                      meta={"entry": "serve_snn",
+                                            "model": args.model,
+                                            "bits": args.bits})
+        print(f"[obs] Chrome trace written to {out} — load in "
+              f"chrome://tracing, validate with "
+              f"`python -m repro.obs.validate {out} --trace`")
+    if server is not None:
+        server.stop()
 
 
 if __name__ == "__main__":

@@ -28,10 +28,11 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--resume", action="store_true")
     from repro.launch.profiling import add_profile_flag, maybe_trace
-    from repro.obs import add_metrics_flag
+    from repro.obs import add_metrics_flag, add_server_flag
 
     add_profile_flag(ap, "/tmp/repro_trace/train")
     add_metrics_flag(ap, "/tmp/repro_metrics/train.jsonl")
+    add_server_flag(ap)
     args = ap.parse_args()
 
     import dataclasses
@@ -61,8 +62,16 @@ def main():
         import shutil
         shutil.rmtree(args.ckpt_dir, ignore_errors=True)
     # enable BEFORE constructing the trainer — instruments bind at
-    # construction time (no-op handles otherwise)
-    registry = obs.enable_default() if args.metrics else None
+    # construction time (no-op handles otherwise).  --metrics-port
+    # implies the registry (a scrape of a disabled registry is empty).
+    metrics_on = bool(args.metrics or args.metrics_port is not None)
+    registry = obs.enable_default() if metrics_on else None
+    server = None
+    if args.metrics_port is not None:
+        server = obs.ObsServer(registry, port=args.metrics_port)
+        port = server.start()
+        print(f"[obs] serving http://127.0.0.1:{port}/metrics "
+              f"(/healthz, /spans?since=N)")
     trainer = Trainer(cfg, tcfg)
     with maybe_trace(args.profile):
         out = trainer.run()
@@ -74,6 +83,8 @@ def main():
                                      "steps": args.steps})
         print(f"[obs] metrics written to {path} — validate with "
               f"`python -m repro.obs.validate {path}`")
+    if server is not None:
+        server.stop()
 
 
 if __name__ == "__main__":

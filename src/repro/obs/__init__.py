@@ -13,19 +13,55 @@ naming contract and the overhead policy):
     via :class:`~repro.obs.telemetry.TelemetryExecutor` — no kernel
     changes.
 
+The LIVE plane sits on top of the same registry:
+
+  * :class:`~repro.obs.server.ObsServer` — an in-process HTTP thread
+    exposing ``/metrics`` (Prometheus text), ``/healthz`` (liveness +
+    watchdog state) and ``/spans?since=`` (incremental span drain);
+  * :mod:`~repro.obs.chrometrace` — the span ring exported as a
+    Chrome/Perfetto ``trace_event`` JSON, requests flow-connected
+    enqueue -> drain;
+  * :class:`~repro.obs.attribution.AttributionExecutor` — per-layer
+    blocked-wall-time attribution joined against the roofline
+    prediction (``snn_layer_time_us``, ``predicted_vs_measured``);
+  * :class:`~repro.obs.watchdog.Watchdog` — EWMA-baselined SLO/drift
+    monitors that dump a flight-recorder artifact on trip.
+
 The process default registry is DISABLED until something opts in
 (``--metrics`` on a launcher, :func:`enable_default` in code); disabled,
 every instrument is a shared no-op and the hot paths pay only an empty
 method call.  ``python -m repro.obs.validate`` schema-checks emitted
-JSONL artifacts.
+JSONL artifacts (``--trace`` for Chrome trace exports).
 """
 
+from repro.obs.attribution import (  # noqa: F401
+    AttributionExecutor,
+    attribution_summary,
+    predict_node_us,
+    timed_forward,
+)
+from repro.obs.chrometrace import (  # noqa: F401
+    export_chrome_trace,
+    span_to_events,
+    to_chrome_trace,
+    validate_chrome_trace,
+)
 from repro.obs.exporters import (    # noqa: F401
     SCHEMA_VERSION,
     read_jsonl,
     to_prometheus,
     validate_jsonl,
     write_jsonl,
+)
+from repro.obs.server import (       # noqa: F401
+    PROMETHEUS_CONTENT_TYPE,
+    ObsServer,
+    add_server_flag,
+)
+from repro.obs.watchdog import (     # noqa: F401
+    Watchdog,
+    WatchdogConfig,
+    histogram_quantile,
 )
 from repro.obs.registry import (     # noqa: F401
     FRACTION_EDGES,

@@ -153,13 +153,28 @@ def validate_jsonl(path: str) -> List[str]:
 # Prometheus text exposition
 # ---------------------------------------------------------------------------
 
+def _escape_label_value(v) -> str:
+    """Label-value escaping per exposition format 0.0.4: backslash,
+    double-quote, and line-feed must be escaped (in that order —
+    escaping the backslash last would corrupt the other two)."""
+    return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _escape_help(text: str) -> str:
+    """HELP-text escaping per exposition format 0.0.4: backslash and
+    line-feed only (double quotes are legal in HELP)."""
+    return str(text).replace("\\", "\\\\").replace("\n", "\\n")
+
+
 def _label_str(labels: Dict[str, str], extra: Optional[Dict] = None) -> str:
     items = dict(labels)
     if extra:
         items.update(extra)
     if not items:
         return ""
-    body = ",".join(f'{k}="{v}"' for k, v in sorted(items.items()))
+    body = ",".join(f'{k}="{_escape_label_value(v)}"'
+                    for k, v in sorted(items.items()))
     return "{" + body + "}"
 
 
@@ -174,7 +189,7 @@ def to_prometheus(registry: MetricsRegistry) -> str:
         if name not in seen_header:
             seen_header.add(name)
             if getattr(m, "help", ""):
-                lines.append(f"# HELP {name} {m.help}")
+                lines.append(f"# HELP {name} {_escape_help(m.help)}")
             lines.append(f"# TYPE {name} {kind}")
         labels = snap["labels"]
         if kind == "histogram":

@@ -29,6 +29,11 @@ and the serve benchmarks gate the residual cost (see obs/README.md).
 Span events (``event(name, **fields)``) land in a bounded ring buffer
 (``max_spans``, oldest dropped first) with a monotonic microsecond
 timestamp — a long-lived server cannot leak memory through its trace.
+Every span also carries a monotonically increasing ``seq``, so the HTTP
+span endpoint (obs/server.py) can drain incrementally
+(``spans_since(seq)``) and ``span_stats()`` can report how many events
+the ring has already dropped — a scraper that falls behind sees the gap
+instead of a silently truncated trace.
 """
 
 from __future__ import annotations
@@ -103,6 +108,10 @@ class Counter:
     def value(self) -> float:
         return self._value
 
+    def zero(self) -> None:
+        with self._lock:
+            self._value = 0.0
+
     def snapshot(self) -> dict:
         return {"kind": self.kind, "name": self.name,
                 "labels": dict(self.labels), "value": self._value}
@@ -127,6 +136,10 @@ class Gauge:
     @property
     def value(self) -> float:
         return self._value
+
+    def zero(self) -> None:
+        with self._lock:
+            self._value = 0.0
 
     def snapshot(self) -> dict:
         return {"kind": self.kind, "name": self.name,
@@ -181,6 +194,12 @@ class Histogram:
     def counts(self) -> List[int]:
         return list(self._counts)
 
+    def zero(self) -> None:
+        with self._lock:
+            self._counts = [0] * (len(self.edges) + 1)
+            self._sum = 0.0
+            self._count = 0
+
     def snapshot(self) -> dict:
         with self._lock:
             return {"kind": self.kind, "name": self.name,
@@ -202,6 +221,7 @@ class MetricsRegistry:
         self._lock = threading.Lock()
         self._metrics: Dict[Tuple[str, LabelsKey], object] = {}
         self._spans: deque = deque(maxlen=max_spans)
+        self._span_seq = 0
         # monotonic epoch for span timestamps (perf_counter, never
         # time.time(): span deltas must survive NTP/DST wall-clock steps)
         self._t0 = time.perf_counter()
@@ -243,13 +263,16 @@ class MetricsRegistry:
     def event(self, name: str, **fields) -> None:
         """Append one span event to the ring buffer (no-op when
         disabled).  ``ts_us`` is microseconds since registry creation on
-        the monotonic clock."""
+        the monotonic clock; ``seq`` is the monotonically increasing
+        event number (1-based), the cursor ``spans_since`` drains by."""
         if not self.enabled:
             return
         ev = {"event": name,
               "ts_us": (time.perf_counter() - self._t0) * 1e6}
         ev.update(fields)
         with self._lock:
+            self._span_seq += 1
+            ev["seq"] = self._span_seq
             self._spans.append(ev)
 
     # -- introspection -------------------------------------------------------
@@ -258,9 +281,39 @@ class MetricsRegistry:
         with self._lock:
             return list(self._metrics.values())
 
+    def find(self, name: str,
+             labels: Optional[Dict[str, str]] = None) -> Optional[object]:
+        """Look up an instrument WITHOUT registering it (``counter()``
+        et al. create on miss; monitors like the watchdog must not)."""
+        with self._lock:
+            return self._metrics.get((name, _labels_key(labels)))
+
+    def find_all(self, name: str) -> List[object]:
+        """Every label series registered under ``name`` (e.g. all the
+        per-layer ``snn_layer_spike_rate{layer=...}`` gauges)."""
+        with self._lock:
+            return [m for (n, _), m in self._metrics.items() if n == name]
+
     def spans(self) -> List[dict]:
         with self._lock:
             return list(self._spans)
+
+    def spans_since(self, seq: int) -> List[dict]:
+        """Spans with ``seq`` strictly greater than the cursor — the
+        incremental drain behind ``GET /spans?since=`` (obs/server.py).
+        A cursor older than the ring simply yields everything retained;
+        ``span_stats()['dropped']`` tells the caller about the gap."""
+        with self._lock:
+            return [dict(ev) for ev in self._spans if ev["seq"] > seq]
+
+    def span_stats(self) -> Dict[str, int]:
+        """``{"appended", "retained", "dropped"}`` — dropped is how many
+        events the bounded ring has already evicted (span_drops in the
+        serve bench records)."""
+        with self._lock:
+            return {"appended": self._span_seq,
+                    "retained": len(self._spans),
+                    "dropped": self._span_seq - len(self._spans)}
 
     def snapshot(self) -> dict:
         """Point-in-time dump: ``{"metrics": [...], "spans": [...]}`` —
@@ -269,9 +322,20 @@ class MetricsRegistry:
                 "spans": self.spans()}
 
     def reset(self) -> None:
+        """Zero every instrument IN PLACE and clear the span ring.
+
+        Call sites bind instrument handles at construction time (the
+        engine/trainer overhead contract), so reset must NOT clear
+        ``_metrics``: that would leave those handles recording into
+        detached objects that no exporter or scrape would ever see
+        again.  Instead each instrument is zeroed through its own lock —
+        held references stay attached and keep recording, and the next
+        snapshot starts from a clean slate."""
         with self._lock:
-            self._metrics.clear()
+            for inst in self._metrics.values():
+                inst.zero()
             self._spans.clear()
+            self._span_seq = 0
             self._t0 = time.perf_counter()
 
 

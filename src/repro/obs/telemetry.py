@@ -42,6 +42,7 @@ from typing import Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.graph.executors import WrappedExecutor as _WrappedExecutor
 from repro.obs.registry import (
     FRACTION_EDGES,
     MetricsRegistry,
@@ -68,12 +69,10 @@ def spike_stats(spikes_t) -> Dict[str, float]:
     }
 
 
-class TelemetryExecutor:
-    """Instrumenting wrapper: delegates every node method to ``inner``
-    and records spike statistics after the spiking layers.  Duck-typed
-    against :func:`repro.graph.executors.run_graph` — the traversal only
-    calls node methods, so any executor (and any future one) can be
-    wrapped without touching graph code.
+class TelemetryExecutor(_WrappedExecutor):
+    """Instrumenting wrapper over any graph executor (see
+    :class:`repro.graph.executors.WrappedExecutor` for the delegation
+    contract): records spike statistics after the spiking layers.
 
     Residual body convs are recorded once, at the merge (matching the
     historical ``apply_with_rates`` points); the non-spiking readout and
@@ -84,28 +83,10 @@ class TelemetryExecutor:
 
     def __init__(self, inner, registry: Optional[MetricsRegistry] = None,
                  prefix: str = "snn_layer"):
-        self.inner = inner
+        super().__init__(inner)
         self.obs = registry if registry is not None else default_registry()
         self.prefix = prefix
         self.records: List[Dict] = []
-
-    # run_graph-facing delegation (trace stays on the inner executor)
-    @property
-    def trace(self):
-        return self.inner.trace
-
-    @property
-    def supports_groups(self):
-        return getattr(self.inner, "supports_groups", False)
-
-    def encode(self, spec, images):
-        return self.inner.encode(spec, images)
-
-    def pool(self, spec, x):
-        return self.inner.pool(spec, x)
-
-    def readout(self, spec, x):
-        return self.inner.readout(spec, x)
 
     def conv(self, spec, x):
         return self._record("conv", spec.name, self.inner.conv(spec, x))

@@ -212,6 +212,79 @@ def test_prometheus_exposition():
     assert "lat_us_count 3" in text
 
 
+def test_prometheus_label_escaping_conformance():
+    """Exposition format 0.0.4: label values escape backslash,
+    double-quote and line-feed — in that order, so a literal ``\\n``
+    in the value stays distinguishable from a newline."""
+    reg = MetricsRegistry()
+    reg.gauge("g", help='has "quotes"\nand\\slashes',
+              labels={"layer": 'conv "A"\nb\\c'}).set(1)
+    reg.counter("c", labels={"v": "\\n"}).inc()      # literal backslash-n
+    text = obs.to_prometheus(reg)
+    assert r'g{layer="conv \"A\"\nb\\c"} 1.0' in text
+    assert r'c{v="\\n"} 1.0' in text                 # NOT a real newline
+    # HELP escapes backslash + newline but keeps quotes literal
+    assert '# HELP g has "quotes"\\nand\\\\slashes' in text
+    # exactly one physical line per sample: no raw newline leaked
+    for line in text.splitlines():
+        assert line.count("{") <= 1
+
+
+def test_prometheus_histogram_always_terminates_with_inf():
+    """Every exported histogram ends its bucket series at le="+Inf"
+    with the total count — even when nothing landed in the overflow."""
+    reg = MetricsRegistry()
+    h = reg.histogram("h", edges=(10.0,))
+    h.observe(1.0)                      # all mass below the last edge
+    text = obs.to_prometheus(reg)
+    lines = [ln for ln in text.splitlines() if ln.startswith("h_bucket")]
+    assert lines[-1] == 'h_bucket{le="+Inf"} 1'
+
+
+# ---------------------------------------------------------------------------
+# reset + incremental span drain
+# ---------------------------------------------------------------------------
+
+def test_reset_keeps_construction_bound_handles_attached():
+    """Regression: reset() must zero instruments IN PLACE.  Call sites
+    bind handles at construction (engine/trainer overhead contract) —
+    clearing the metric dict would leave those handles recording into
+    objects no snapshot ever sees again."""
+    reg = MetricsRegistry()
+    c = reg.counter("reqs_total")
+    h = reg.histogram("lat", edges=(1.0,))
+    c.inc(5)
+    h.observe(0.5)
+    reg.event("tick")
+    reg.reset()
+    assert c.value == 0.0 and h.count == 0
+    assert reg.spans() == [] and reg.span_stats()["appended"] == 0
+    # the held handle is still THE registered instrument: post-reset
+    # recording shows up in fresh snapshots
+    c.inc(2)
+    h.observe(0.5)
+    assert reg.counter("reqs_total") is c
+    snap = {m["name"]: m for m in reg.snapshot()["metrics"]}
+    assert snap["reqs_total"]["value"] == 2.0
+    assert snap["lat"]["count"] == 1
+
+
+def test_spans_since_cursor_and_drop_accounting():
+    reg = MetricsRegistry(max_spans=4)
+    for i in range(3):
+        reg.event("tick", i=i)
+    got = reg.spans_since(0)
+    assert [ev["i"] for ev in got] == [0, 1, 2]
+    cursor = got[-1]["seq"]
+    assert reg.spans_since(cursor) == []
+    for i in range(3, 9):               # overflow the ring (maxlen 4)
+        reg.event("tick", i=i)
+    st = reg.span_stats()
+    assert st == {"appended": 9, "retained": 4, "dropped": 5}
+    # a stale cursor yields what's retained, not an error
+    assert [ev["i"] for ev in reg.spans_since(cursor)] == [5, 6, 7, 8]
+
+
 # ---------------------------------------------------------------------------
 # validator
 # ---------------------------------------------------------------------------
