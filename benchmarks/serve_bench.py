@@ -9,6 +9,11 @@ Measures what the deploy subsystem buys on the serving path:
   * engine records   — mixed-size synthetic stream through
                        SNNServeEngine: img/s, latency percentiles,
                        compile counts (zero recompiles after warmup)
+  * open-loop records — the SAME seeded Poisson arrival process offered
+                       to the sync engine and the async tier
+                       (repro.serve_async): offered vs achieved rps,
+                       p50/p95/p99, queue/compute split — see
+                       benchmarks/README.md "Open-loop load testing"
 
 Emits CSV lines via bench_lib and writes ``BENCH_serve.json`` next to
 this file (``BENCH_serve_full.json`` under ``--full``, so paper-size
@@ -29,7 +34,8 @@ except ImportError:        # … or `from benchmarks import serve_bench`
 def run(smoke: bool = True, model: str = "vgg9", requests: int = 24,
         max_batch: int = 8, out: str | None = None,
         metrics: str | None = None,
-        metrics_port: int | None = None) -> str:
+        metrics_port: int | None = None,
+        openloop_rps: float = 40.0) -> str:
     import jax
     import numpy as np
 
@@ -124,6 +130,60 @@ def run(smoke: bool = True, model: str = "vgg9", requests: int = 24,
             f";watchdog_trips={wdog.trips_total}"
             f";span_drops={registry.span_stats()['dropped']}")
 
+    # -- open-loop Poisson comparison (W4 only — one load point) -------------
+    # Closed-loop records above measure the engine at its own pace; the
+    # open-loop pair offers the SAME seeded Poisson arrival process to
+    # the synchronous engine and the async continuous-batching tier and
+    # reports offered vs achieved throughput SEPARATELY (equal only when
+    # the tier kept up).  All load-dependent keys (offered/achieved rps,
+    # percentiles, queue/compute split, timeouts) are informational —
+    # the gate diffs only `bits` and `recompiles_after_warmup` here
+    # (see gate.py STRUCTURAL_KEYS): batch count under open-loop
+    # arrivals depends on timing, so `batches`/`compiles` are
+    # deliberately absent from these records.
+    from repro.serve_async import (
+        AsyncEngineConfig, AsyncSNNServeEngine, poisson_schedule,
+        run_open_loop_async, run_open_loop_sync,
+    )
+
+    bits = 4
+    cfg = deploy_config(model, bits, smoke=smoke)
+    params = snn_cnn.init(jax.random.PRNGKey(0), cfg)
+    packed = deploy(params, cfg)
+    images = np.asarray(
+        np.random.default_rng(1).random(
+            (8, cfg.img_size, cfg.img_size, cfg.in_channels)), np.float32)
+    schedule = poisson_schedule(openloop_rps, requests, seed=0)
+
+    reports = {}
+    for mode in ("sync", "async"):
+        eng = SNNServeEngine(packed, SNNEngineConfig(max_batch=max_batch))
+        eng.warmup()
+        warm = eng.compile_count
+        if mode == "sync":
+            reports[mode] = run_open_loop_sync(eng, images, schedule)
+            eng.close()
+        else:
+            aeng = AsyncSNNServeEngine(eng, AsyncEngineConfig(workers=1))
+            aeng.start()
+            reports[mode] = run_open_loop_async(aeng, images, schedule)
+            aeng.close()
+        recompiles = eng.compile_count - warm
+        assert recompiles == 0, f"recompiled under load: {recompiles}"
+        rep = reports[mode]
+        bench_lib.emit(
+            f"snn_serve_openloop/{model}/w{bits}/{mode}",
+            1e6 * rep.wall_s / max(rep.completed, 1),
+            f"bits={bits};recompiles_after_warmup={recompiles}"
+            f";offered_rps={rep.offered_rps:.1f}"
+            f";achieved_rps={rep.achieved_rps:.1f}"
+            f";completed={rep.completed};timeouts={rep.timeouts}"
+            f";latency_p50_ms={rep.latency_p50_ms:.2f}"
+            f";latency_p95_ms={rep.latency_p95_ms:.2f}"
+            f";latency_p99_ms={rep.latency_p99_ms:.2f}"
+            f";queue_avg_ms={rep.queue_avg_ms:.2f}"
+            f";compute_avg_ms={rep.compute_avg_ms:.2f}")
+
     if metrics is not None:
         path = obs.write_jsonl(registry, metrics,
                                meta={"entry": "serve_bench",
@@ -149,6 +209,9 @@ def main():
                     choices=("vgg9", "vgg16", "resnet18"))
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=40.0,
+                    help="offered load (req/s) for the open-loop "
+                         "sync-vs-async comparison records")
     ap.add_argument("--out", default=None,
                     help="write BENCH json here instead of the committed "
                          "baseline path (what the CI gate leg does)")
@@ -159,7 +222,7 @@ def main():
     args = ap.parse_args()
     run(smoke=args.smoke, model=args.model, requests=args.requests,
         max_batch=args.max_batch, out=args.out, metrics=args.metrics,
-        metrics_port=args.metrics_port)
+        metrics_port=args.metrics_port, openloop_rps=args.rate)
 
 
 if __name__ == "__main__":

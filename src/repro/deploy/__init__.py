@@ -8,6 +8,7 @@ the engine contract.
 """
 
 from repro.deploy.engine import (       # noqa: F401
+    InflightStep,
     SNNEngineConfig,
     SNNRequest,
     SNNServeEngine,

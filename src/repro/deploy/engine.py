@@ -33,6 +33,16 @@ batch counts, padding waste (padded slots / bucket slots), and the
 compile count.  benchmarks/serve_bench.py turns these into
 BENCH_serve.json.
 
+Scheduling hooks: ``step()`` is a thin composition of two slot-level
+hooks — ``begin_step(batch)`` dispatches a formed microbatch WITHOUT
+blocking (jax async dispatch; returns an :class:`InflightStep`) and
+``finish_step(st, sink=...)`` blocks, accounts, and hands each completed
+request to ``sink``.  The asynchronous continuous-batching tier
+(``repro.serve_async``) drives these hooks from worker threads,
+pipelining the next microbatch's host->device transfer under the
+current device step; ``close()`` gives both tiers graceful drain
+semantics (flush the partial bucket, then refuse new work).
+
 Observability: the engine binds instruments from a
 :class:`repro.obs.MetricsRegistry` (the process default unless one is
 passed) at construction — request/batch/compile-hit/miss counters,
@@ -50,9 +60,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
 from collections import deque
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -74,6 +85,25 @@ class SNNRequest:
                                      # + drain bookkeeping)
     queue_s: float = 0.0             # enqueue -> bucket admit
     compute_s: float = 0.0           # the batched forward's share
+
+
+@dataclasses.dataclass
+class InflightStep:
+    """One dispatched-but-not-collected microbatch: the handle
+    :meth:`SNNServeEngine.begin_step` returns and
+    :meth:`SNNServeEngine.finish_step` consumes.  ``logits`` is the
+    device array of the in-flight forward — jax dispatch is
+    asynchronous, so holding an InflightStep means the device (or the
+    XLA CPU stream) is still working while the host forms the next
+    microbatch.  The async tier (repro.serve_async) keeps a short deque
+    of these to overlap host->device transfer with compute."""
+
+    batch: List[SNNRequest]
+    bucket: int
+    n: int
+    logits: object                  # un-materialized device array
+    t0: float                       # perf_counter at dispatch
+    pad_frac: float
 
 
 @dataclasses.dataclass
@@ -115,6 +145,13 @@ class SNNServeEngine:
         self.cfg = cfg
         self.queue: deque = deque()
         self.done: Dict[int, SNNRequest] = {}
+        self._closed = False
+        # begin_step/finish_step may be driven from the async tier's
+        # worker threads (repro.serve_async): the compile cache and the
+        # O(1) accounting totals each get a lock; the hot path inside
+        # one microbatch stays lock-free.
+        self._compile_lock = threading.Lock()
+        self._acct_lock = threading.Lock()
 
         self._mesh = None
         n_dev = 1
@@ -190,6 +227,7 @@ class SNNServeEngine:
         compile-cache state, running totals, watchdog state."""
         body = {
             "queue_depth": len(self.queue),
+            "closed": self._closed,
             "undrained_results": len(self.done),
             "requests_total": self.total_requests,
             "batches_total": self.total_batches,
@@ -238,17 +276,22 @@ class SNNServeEngine:
     def _executable(self, bucket: int):
         exe = self._compiled.get(bucket)
         if exe is None:
-            self._m_compile_miss.inc()
-            t0 = time.perf_counter()
-            cfg = self.cfg
-            spec = jax.ShapeDtypeStruct(
-                (bucket, cfg.img_size, cfg.img_size, cfg.in_channels),
-                jnp.float32)
-            exe = jax.jit(self._fwd).lower(self.model, spec).compile()
-            self._compiled[bucket] = exe
-            self.compile_count += 1
-            self.obs.event("compile", bucket=bucket, result="miss",
-                           compile_us=(time.perf_counter() - t0) * 1e6)
+            with self._compile_lock:     # concurrent workers build once
+                exe = self._compiled.get(bucket)
+                if exe is not None:
+                    self._m_compile_hit.inc()
+                    return exe
+                self._m_compile_miss.inc()
+                t0 = time.perf_counter()
+                cfg = self.cfg
+                spec = jax.ShapeDtypeStruct(
+                    (bucket, cfg.img_size, cfg.img_size, cfg.in_channels),
+                    jnp.float32)
+                exe = jax.jit(self._fwd).lower(self.model, spec).compile()
+                self._compiled[bucket] = exe
+                self.compile_count += 1
+                self.obs.event("compile", bucket=bucket, result="miss",
+                               compile_us=(time.perf_counter() - t0) * 1e6)
         else:
             self._m_compile_hit.inc()
         return exe
@@ -268,12 +311,24 @@ class SNNServeEngine:
 
     # -- request plumbing ----------------------------------------------------
 
-    def add_request(self, req: SNNRequest):
+    def validate_request(self, req: SNNRequest) -> None:
+        """Admission check shared by the synchronous queue and the async
+        tier's emplace-on-arrival path: the image must match the served
+        model's geometry BEFORE it is accepted, so a bad request fails
+        at submit time instead of poisoning a formed microbatch."""
         cfg = self.cfg
         want = (cfg.img_size, cfg.img_size, cfg.in_channels)
         if tuple(req.image.shape) != want:
             raise ValueError(f"request {req.uid}: image shape "
                              f"{tuple(req.image.shape)} != model {want}")
+
+    def add_request(self, req: SNNRequest):
+        if self._closed:
+            raise RuntimeError(
+                "engine is closed — close() drained the queue; build a "
+                "new engine (or use repro.serve_async for live admission "
+                "control)")
+        self.validate_request(req)
         # perf_counter, NOT time.time(): latency deltas must come from a
         # monotonic clock — a wall-clock step (NTP slew, DST) would
         # corrupt p50/p95/max and flap the benchmark gate
@@ -283,6 +338,100 @@ class SNNServeEngine:
         self.obs.event("enqueue", uid=req.uid, queue_depth=len(self.queue))
 
     # -- main loop -----------------------------------------------------------
+
+    def begin_step(self, batch: List[SNNRequest], bucket: Optional[int] = None,
+                   queue_depth: Optional[int] = None) -> InflightStep:
+        """Slot-level admission hook: dispatch one FORMED microbatch and
+        return without blocking on the result.
+
+        The split from :meth:`finish_step` is what the async tier
+        (repro.serve_async) pipelines on: jax dispatch is asynchronous,
+        so the host->device transfer and compute of this microbatch
+        overlap whatever the caller does next — including forming and
+        dispatching the next microbatch before collecting this one.
+        The synchronous :meth:`step` simply calls the pair back to back.
+
+        ``batch`` requests must already carry ``queue_s`` (enqueue ->
+        admit) and ``_t0``; ``queue_depth`` is what the admit span
+        reports as still waiting (defaults to the engine's own queue —
+        the async tier passes its own queue's depth)."""
+        n = len(batch)
+        if n == 0:
+            raise ValueError("begin_step needs a non-empty batch")
+        if bucket is None:
+            bucket = self.bucket_for(n)
+        if queue_depth is None:
+            queue_depth = len(self.queue)
+        pad_frac = (bucket - n) / bucket
+        self._m_occupancy.set(n / bucket)
+        self._m_pad_waste.set(pad_frac)
+        self.obs.event("admit", n=n, bucket=bucket, pad_frac=pad_frac,
+                       queue_depth=queue_depth)
+        exe = self._executable(bucket)
+
+        images = np.zeros((bucket, self.cfg.img_size, self.cfg.img_size,
+                           self.cfg.in_channels), np.float32)
+        for i, req in enumerate(batch):
+            images[i] = req.image
+        t0 = time.perf_counter()
+        # the annotation names this dispatch in --profile traces
+        # (snn_serve_step/b<bucket>) — zero work when nothing is tracing
+        with jax.profiler.TraceAnnotation(f"snn_serve_step/b{bucket}"):
+            logits = exe(self.model, jnp.asarray(images))
+        return InflightStep(batch=batch, bucket=bucket, n=n, logits=logits,
+                            t0=t0, pad_frac=pad_frac)
+
+    def finish_step(self, st: InflightStep,
+                    sink: Optional[Callable[[SNNRequest], None]] = None
+                    ) -> int:
+        """Block on a dispatched microbatch, account it, and hand every
+        completed request to ``sink`` (default: the ``done`` dict the
+        synchronous ``pop_result`` drains — the async tier passes a sink
+        that resolves futures instead, so ``done`` never grows there).
+        Returns the number of requests completed."""
+        logits = np.asarray(jax.block_until_ready(st.logits))
+        dt = time.perf_counter() - st.t0
+        bucket, n = st.bucket, st.n
+        with self._acct_lock:
+            self.per_bucket[bucket] = self.per_bucket.get(bucket, 0) + 1
+            self.total_batches += 1
+            self.total_compute_s += dt
+            self.total_padded_slots += bucket - n
+            self.total_slots += bucket
+        self._m_batches.inc()
+        self._m_compute_us.observe(dt * 1e6)
+        self.obs.event("step", bucket=bucket, n=n, pad_frac=st.pad_frac,
+                       compute_us=dt * 1e6)
+
+        now = time.perf_counter()
+        for i, req in enumerate(st.batch):
+            req.image = None        # consumed — don't retain every input
+            req.logits = logits[i]
+            req.pred = int(np.argmax(logits[i]))
+            req.compute_s = dt
+            req.latency_s = now - req._t0
+            with self._acct_lock:
+                self.total_requests += 1
+                self.total_latency_s += req.latency_s
+                self.total_queue_s += req.queue_s
+                self.total_request_compute_s += dt
+                self.max_latency_s = max(self.max_latency_s, req.latency_s)
+            self._m_requests.inc()
+            self._m_queue_us.observe(req.queue_s * 1e6)
+            self._m_latency_us.observe(req.latency_s * 1e6)
+            self.obs.event("drain", uid=req.uid,
+                           queue_us=req.queue_s * 1e6,
+                           compute_us=req.compute_s * 1e6,
+                           latency_us=req.latency_s * 1e6)
+            if sink is None:
+                self.done[req.uid] = req
+            else:
+                sink(req)
+        if self._watchdog is not None:
+            # after the drain loop: the histograms/gauges the rules read
+            # already include this microbatch
+            self._watchdog.check()
+        return n
 
     def step(self) -> int:
         """Serve one microbatch (up to max_batch queued requests, padded
@@ -296,62 +445,8 @@ class SNNServeEngine:
             req = self.queue.popleft()
             req.queue_s = t_admit - req._t0
             batch.append(req)
-        n = len(batch)
-        bucket = self.bucket_for(n)
         self._m_queue_depth.set(len(self.queue))
-        self._m_occupancy.set(n / bucket)
-        pad_frac = (bucket - n) / bucket
-        self._m_pad_waste.set(pad_frac)
-        self.obs.event("admit", n=n, bucket=bucket, pad_frac=pad_frac,
-                       queue_depth=len(self.queue))
-        exe = self._executable(bucket)
-
-        images = np.zeros((bucket, self.cfg.img_size, self.cfg.img_size,
-                           self.cfg.in_channels), np.float32)
-        for i, req in enumerate(batch):
-            images[i] = req.image
-        t0 = time.perf_counter()
-        # the annotation names this dispatch in --profile traces
-        # (snn_serve_step/b<bucket>) — zero work when nothing is tracing
-        with jax.profiler.TraceAnnotation(f"snn_serve_step/b{bucket}"):
-            logits = exe(self.model, jnp.asarray(images))
-            logits = np.asarray(jax.block_until_ready(logits))
-        dt = time.perf_counter() - t0
-        self.per_bucket[bucket] = self.per_bucket.get(bucket, 0) + 1
-        self.total_batches += 1
-        self.total_compute_s += dt
-        self.total_padded_slots += bucket - n
-        self.total_slots += bucket
-        self._m_batches.inc()
-        self._m_compute_us.observe(dt * 1e6)
-        self.obs.event("step", bucket=bucket, n=n, pad_frac=pad_frac,
-                       compute_us=dt * 1e6)
-
-        now = time.perf_counter()
-        for i, req in enumerate(batch):
-            req.image = None        # consumed — don't retain every input
-            req.logits = logits[i]
-            req.pred = int(np.argmax(logits[i]))
-            req.compute_s = dt
-            req.latency_s = now - req._t0
-            self.total_requests += 1
-            self.total_latency_s += req.latency_s
-            self.total_queue_s += req.queue_s
-            self.total_request_compute_s += dt
-            self.max_latency_s = max(self.max_latency_s, req.latency_s)
-            self.done[req.uid] = req
-            self._m_requests.inc()
-            self._m_queue_us.observe(req.queue_s * 1e6)
-            self._m_latency_us.observe(req.latency_s * 1e6)
-            self.obs.event("drain", uid=req.uid,
-                           queue_us=req.queue_s * 1e6,
-                           compute_us=req.compute_s * 1e6,
-                           latency_us=req.latency_s * 1e6)
-        if self._watchdog is not None:
-            # after the drain loop: the histograms/gauges the rules read
-            # already include this microbatch
-            self._watchdog.check()
-        return n
+        return self.finish_step(self.begin_step(batch))
 
     def pop_result(self, uid: int) -> SNNRequest:
         """Remove and return a completed request.  Long-lived servers
@@ -375,6 +470,38 @@ class SNNServeEngine:
                 f"after max_steps={max_steps} — raise max_steps or drain "
                 f"with step()")
         return self.stats()
+
+    def close(self, drain: bool = True) -> dict:
+        """Graceful shutdown: flush any partial bucket still queued
+        (``drain=True``, the default) instead of stranding requests,
+        then refuse further ``add_request`` calls.  ``drain=False``
+        explicitly abandons the queue — the count of stranded requests
+        goes into the ``close`` span so the abandonment is observable,
+        never silent.  Idempotent; returns the final :meth:`stats`.
+
+        The engine is also a context manager: ``with SNNServeEngine(...)
+        as eng: ...`` drains on exit, so a crashing caller cannot leak a
+        half-served queue."""
+        if self._closed:
+            return self.stats()
+        drained = 0
+        stranded = 0
+        if drain:
+            while self.queue:
+                drained += self.step()
+        else:
+            stranded = len(self.queue)
+            self.queue.clear()
+        self._closed = True
+        self._m_queue_depth.set(0)
+        self.obs.event("close", drained=drained, stranded=stranded)
+        return self.stats()
+
+    def __enter__(self) -> "SNNServeEngine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close(drain=exc_type is None)
 
     # -- accounting ----------------------------------------------------------
 

@@ -6,6 +6,13 @@ through the bucket-cached :class:`~repro.deploy.engine.SNNServeEngine`.
 
 Run:  PYTHONPATH=src python -m repro.launch.serve_snn [--full] [--bits 4]
 
+``--async`` routes the stream through the continuous-batching tier
+(repro.serve_async): per-request futures, ``--workers`` threads,
+``--deadline-ms`` admission deadlines, graceful drain on exit.
+``--rate R`` (async only) switches submission to an open-loop Poisson
+arrival process at R requests/s; the sync-vs-async open-loop comparison
+lives in ``python -m repro.serve_async.loadgen --mode both``.
+
 The live observability plane (obs/README.md) hangs off three flags:
 ``--metrics-port`` starts the in-process HTTP server (/metrics,
 /healthz, /spans) for scraping DURING the run; ``--trace`` exports the
@@ -34,6 +41,21 @@ def main():
     add_geometry_flags(ap)
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="serve through the continuous-batching async "
+                         "tier (repro.serve_async): emplace-on-arrival "
+                         "admission, pipelined rollouts, per-request "
+                         "futures, graceful drain on exit")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="async-tier worker threads (with --async)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="async admission deadline; expired requests "
+                         "resolve as explicit timeout results "
+                         "(with --async)")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="offered load in requests/s; >0 submits on a "
+                         "seeded Poisson arrival schedule (open loop) "
+                         "instead of enqueueing everything up front")
     ap.add_argument("--data-parallel", action="store_true",
                     help="shard_map the forward over local devices")
     ap.add_argument("--package", default="",
@@ -106,11 +128,17 @@ def main():
 
     eng = SNNServeEngine(model, SNNEngineConfig(
         max_batch=args.max_batch, data_parallel=args.data_parallel))
+    aeng = None
+    if args.use_async:
+        from repro.serve_async import AsyncEngineConfig, AsyncSNNServeEngine
+
+        aeng = AsyncSNNServeEngine(eng, AsyncEngineConfig(
+            workers=args.workers, default_deadline_ms=args.deadline_ms))
 
     server = None
     if args.metrics_port is not None:
         server = obs.ObsServer(registry, port=args.metrics_port,
-                               health_fn=eng.health)
+                               health_fn=(aeng or eng).health)
         port = server.start()
         print(f"[obs] serving http://127.0.0.1:{port}/metrics "
               f"(/healthz, /spans?since=N)")
@@ -156,15 +184,45 @@ def main():
                                    artifact_dir=args.watchdog_dir or None))
         eng.attach_watchdog(watchdog)
 
-    for uid in range(args.requests):
-        eng.add_request(SNNRequest(
-            uid=uid,
-            image=rng.random((cfg.img_size, cfg.img_size,
-                              cfg.in_channels)).astype(np.float32)))
-    t0 = time.perf_counter()
-    with maybe_trace(args.profile):
-        eng.run_until_done(max_steps=args.requests)
-    stats = eng.stats(wall_s=time.perf_counter() - t0)
+    images = [rng.random((cfg.img_size, cfg.img_size,
+                          cfg.in_channels)).astype(np.float32)
+              for _ in range(min(args.requests, 16))]
+    if args.use_async:
+        from repro.serve_async import (
+            poisson_schedule, run_open_loop_async,
+        )
+
+        aeng.start()
+        t0 = time.perf_counter()
+        with maybe_trace(args.profile):
+            if args.rate > 0:
+                rep = run_open_loop_async(
+                    aeng, np.stack(images),
+                    poisson_schedule(args.rate, args.requests),
+                    deadline_ms=args.deadline_ms)
+                print(rep.summary())
+            else:
+                futs = [aeng.submit(images[uid % len(images)])
+                        for uid in range(args.requests)]
+                done = sum(f.result(timeout=300).ok for f in futs)
+                print(f"{done}/{args.requests} futures resolved ok")
+            aeng.close()        # graceful drain: flushes queue+pipeline
+        stats = aeng.stats(wall_s=time.perf_counter() - t0)
+        a = stats["async"]
+        print(f"async tier: {a['workers']} workers, "
+              f"{a['submitted']} submitted / {a['completed']} completed "
+              f"/ {a['timeouts']} timeout / {a['cancelled']} cancelled, "
+              f"{a['slots_recycled']} slot recycles "
+              f"(capacity {a['slot_capacity']}), "
+              f"p99={stats['latency_p99_ms']:.1f}ms")
+    else:
+        for uid in range(args.requests):
+            eng.add_request(SNNRequest(
+                uid=uid, image=images[uid % len(images)]))
+        t0 = time.perf_counter()
+        with maybe_trace(args.profile):
+            eng.run_until_done(max_steps=args.requests)
+        stats = eng.stats(wall_s=time.perf_counter() - t0)
     print(f"served {stats['requests']} requests in {stats['wall_s']:.2f}s "
           f"({stats['images_per_s']:.1f} img/s, "
           f"{stats['batches']} batches, {stats['compiles']} compiles, "

@@ -25,6 +25,11 @@ it):
   * trainer steps on the **train** track, per-layer attribution
     (``predicted_vs_measured``) and sampled telemetry on the **layers**
     track, watchdog trips/clears on the **watchdog** track.
+  * async-tier slot lifetimes on the **slots** track: each ``recycle``
+    becomes a duration event ``slot/<n>`` spanning its carried
+    ``held_us``, so continuous-batching occupancy reads as recurring
+    per-slot lanes; ``evict`` instants land on the requests track and
+    terminate the evicted request's enqueue flow arrow.
   * anything unrecognized lands on the **misc** track as an instant with
     its fields preserved in ``args`` — new span producers degrade to
     visible, never to dropped.
@@ -51,6 +56,7 @@ TRACKS = {
     "layers": 4,
     "watchdog": 5,
     "misc": 6,
+    "slots": 7,
 }
 
 _FLOW_CAT = "request"
@@ -123,6 +129,22 @@ def span_to_events(ev: dict) -> List[dict]:
             _base("f", f"req/{uid}", ts, TRACKS["requests"],
                   cat=_FLOW_CAT, id=uid, bp="e"),
         ]
+    if kind == "evict":
+        # deadline-expired request: terminate its enqueue flow arrow and
+        # mark the eviction where the request lane would have drained
+        uid = ev.get("uid", -1)
+        return [
+            _base("i", f"evict/{uid}", ts, TRACKS["requests"], s="t",
+                  args=_args(ev)),
+            _base("f", f"req/{uid}", ts, TRACKS["requests"],
+                  cat=_FLOW_CAT, id=uid, bp="e"),
+        ]
+    if kind == "recycle":
+        # slot-lifetime row: one duration event per occupancy interval,
+        # named by slot so each slot renders as its own recurring lane
+        return [_duration(f"slot/{ev.get('slot', '?')}", ts,
+                          ev.get("held_us"), TRACKS["slots"],
+                          args=_args(ev, "held_us"), cat="slot")]
     if kind == "train_step":
         return [_duration(f"train_step/{ev.get('step', '?')}", ts,
                           ev.get("dt_us"), TRACKS["train"],

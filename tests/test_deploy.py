@@ -331,6 +331,54 @@ def test_engine_stats_accounting(packed_model):
     assert drained["latency_avg_ms"] > 0
     assert drained["latency_max_ms"] >= stats["latency_p95_ms"]
 
+def test_engine_close_drains_partial_bucket(packed_model):
+    """Graceful shutdown: close(drain=True) flushes whatever is queued —
+    including a partial bucket — then refuses new work.  Idempotent."""
+    cfg = packed_model.cfg
+    eng = SNNServeEngine(packed_model, SNNEngineConfig(max_batch=4,
+                                                       buckets=(4,)))
+    rng = np.random.default_rng(11)
+    for uid in range(3):                   # 3 < bucket: a partial batch
+        eng.add_request(SNNRequest(
+            uid=uid, image=rng.random(
+                (cfg.img_size, cfg.img_size, cfg.in_channels)
+            ).astype(np.float32)))
+    stats = eng.close()
+    assert stats["requests"] == 3
+    assert len(eng.queue) == 0
+    assert all(eng.pop_result(uid).logits is not None for uid in range(3))
+    assert eng.health()["closed"] is True
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.add_request(SNNRequest(uid=9, image=rng.random(
+            (cfg.img_size, cfg.img_size, cfg.in_channels)
+        ).astype(np.float32)))
+    assert eng.close()["requests"] == 3    # second close: no-op
+
+
+def test_engine_context_manager_drains_on_clean_exit(packed_model):
+    cfg = packed_model.cfg
+    rng = np.random.default_rng(12)
+    with SNNServeEngine(packed_model,
+                        SNNEngineConfig(max_batch=2,
+                                        buckets=(2,))) as eng:
+        eng.add_request(SNNRequest(
+            uid=0, image=rng.random(
+                (cfg.img_size, cfg.img_size, cfg.in_channels)
+            ).astype(np.float32)))
+    assert eng.total_requests == 1         # drained at __exit__
+    # an exception path must NOT spend time serving the backlog
+    with pytest.raises(RuntimeError, match="boom"):
+        with SNNServeEngine(packed_model,
+                            SNNEngineConfig(max_batch=2,
+                                            buckets=(2,))) as eng2:
+            eng2.add_request(SNNRequest(
+                uid=0, image=rng.random(
+                    (cfg.img_size, cfg.img_size, cfg.in_channels)
+                ).astype(np.float32)))
+            raise RuntimeError("boom")
+    assert eng2.total_requests == 0 and len(eng2.queue) == 0
+
+
 # ---------------------------------------------------------------------------
 # observability: latency split, padding waste, metrics integration
 # ---------------------------------------------------------------------------
